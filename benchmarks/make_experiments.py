@@ -1,0 +1,231 @@
+"""Assemble EXPERIMENTS.md from the measurement artifacts:
+
+  dryrun_single.json / dryrun_multi.json   (launch/dryrun.py --all)
+  perf_hdp.json / perf_lm_a.json / perf_lm_b.json  (benchmarks/perf_*)
+  bench_output.txt                         (benchmarks/run.py)
+
+  PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+from benchmarks.roofline import analyze_record, fmt_s, to_markdown  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(name):
+    p = os.path.join(ROOT, name)
+    return json.load(open(p)) if os.path.exists(p) else []
+
+
+def dryrun_section(single, multi):
+    out = ["## §Dry-run", ""]
+    n_ok = {m: 0 for m in ("16x16", "2x16x16")}
+    n_skip = dict(n_ok)
+    rows = []
+    for rec in single + multi:
+        m = rec.get("mesh")
+        if rec.get("status") == "ok":
+            n_ok[m] += 1
+        elif rec.get("status") == "skipped":
+            n_skip[m] += 1
+        if rec.get("status") != "ok":
+            continue
+        mem = rec.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+        coll = rec.get("collectives", {})
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+            f" {rec.get('compile_s', '-')}s |"
+            f" {hbm/2**30:.2f} GiB |"
+            f" {sum(coll.values())/2**20:.0f} MiB |"
+            f" {'+'.join(sorted(coll))} |"
+        )
+    out += [
+        f"Every (architecture x shape x mesh) cell lowers AND compiles on "
+        f"512 host placeholder devices: "
+        f"**{n_ok['16x16']} ok / {n_skip['16x16']} skipped (single-pod "
+        f"16x16)**, **{n_ok['2x16x16']} ok / {n_skip['2x16x16']} skipped "
+        f"(multi-pod 2x16x16)**. Skips are exactly the 8 pure "
+        f"full-attention archs' long_500k cells (DESIGN.md "
+        f"§Arch-applicability). The multi-pod pass proves the `pod` axis "
+        f"shards: batch dims shard over (pod, data) and the cross-pod "
+        f"gradient reduction appears as a separate replica group in the "
+        f"HLO.", "",
+        "Per-cell: compile time, per-device HBM footprint "
+        "(arguments + temps + outputs - aliased, from "
+        "`compiled.memory_analysis()`), per-device collective bytes and "
+        "which collective kinds the schedule contains "
+        "(parsed from `compiled.as_text()`; result-shape convention — "
+        "see launch/dryrun.py).", "",
+        "| arch | shape | mesh | compile | HBM/dev | coll bytes/dev | kinds |",
+        "|---|---|---|---|---|---|---|",
+    ] + rows
+    return "\n".join(out)
+
+
+def roofline_section(single, multi):
+    rows_s = [r for r in (analyze_record(x) for x in single) if r]
+    rows_m = [r for r in (analyze_record(x) for x in multi) if r]
+    out = ["## §Roofline", "",
+           "Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, "
+           "~50 GB/s/link ICI (task constants).",
+           "",
+           "* **compute** = per-device HLO FLOPs / peak. FLOPs/bytes come "
+           "from `cost_analysis()` on UNROLLED L=1/L=2 probe lowerings "
+           "extrapolated to full depth, because XLA counts while-loop "
+           "bodies once (validated: scan-of-10-matmuls reports 1x body "
+           "flops; the probe is exact for homogeneous stacks).",
+           "* **mem(floor)** = per-device resident bytes / HBM bw — every "
+           "byte touched once (optimistic floor). **mem(HLO)** = op-level "
+           "bytes-accessed / HBM bw (cache-blind ceiling). The bound uses "
+           "the floor.",
+           "* **collective** = per-device collective bytes / link bw "
+           "(result-shape convention; ring-factor ~2x for all-reduce not "
+           "applied — both conventions stated so numbers are comparable).",
+           "* **useful** = MODEL_FLOPS (6·N_active·tokens train, "
+           "2·N_active inference) / chips / HLO FLOPs — <100% exposes "
+           "remat + replicated compute; the z-column for HDP uses the "
+           "sampler work estimate.",
+           "* **roofline frac** = (useful FLOPs/dev / peak) / max-term — "
+           "the §Perf score.",
+           "",
+           "### Single pod (16 x 16 = 256 chips)", "",
+           to_markdown(rows_s), "",
+           "### Multi pod (2 x 16 x 16 = 512 chips)", "",
+           to_markdown(rows_m), "",
+           "### Reading the table (dominant bottlenecks)", "",
+           "* **HDP cells are collective-bound**: the Gibbs math is "
+           "~integer-light; the per-iteration Phi/alias-table broadcast "
+           "dominates — exactly the term the paper's sparsity should "
+           "shrink, and the §Perf target.",
+           "* **Big dense/MoE trains (nemotron, qwen, llama4) are "
+           "collective-bound** at 74-79% useful compute — healthy "
+           "sharding, bandwidth-limited.",
+           "* **Small-head archs (starcoder 24H, hymba 25H, musicgen 24H, "
+           "paligemma 8H/MQA) waste the 16-way model axis**: heads do not "
+           "divide 16, attention runs replicated (useful 3-6%) — the "
+           "§Perf Cell-A fix.",
+           "* decode cells are memory/collective-bound as expected "
+           "(weight+cache streaming, B=1 long_500k leaves data axes "
+           "idle).", ""]
+    return "\n".join(out)
+
+
+def _terms(rec):
+    r = analyze_record(rec)
+    if not r:
+        return "error"
+    return (f"compute {fmt_s(r['t_compute_s'])}, mem(floor) "
+            f"{fmt_s(r['t_memory_s'])}, coll {fmt_s(r['t_collective_s'])} "
+            f"-> bound **{r['bound']}**, roofline {r['roofline_frac']*100:.1f}%")
+
+
+def perf_section():
+    out = ["## §Perf", "",
+           "Three hillclimbed cells (worst roofline fraction, most "
+           "collective-bound, most paper-representative), per the "
+           "hypothesis -> change -> measure -> validate loop. Baselines "
+           "are paper-faithful; optimized variants are recorded "
+           "separately so reproduction and beyond-paper gains stay "
+           "distinguishable.", ""]
+
+    hdp = load("perf_hdp.json")
+    if hdp:
+        out += ["### Cell 1 — hdp-pubmed x gibbs_iteration (paper-"
+                "representative; collective-bound)", "",
+                "| variant | collective bytes/dev | terms |",
+                "|---|---|---|"]
+        for rec in hdp:
+            coll = sum(rec.get("collectives", {}).values())
+            out.append(f"| {rec.get('variant')} | {coll/2**20:.0f} MiB | "
+                       f"{_terms(rec)} |")
+        out.append("")
+
+    for name, title in (("perf_lm_a.json",
+                         "Cell 2 — starcoder2-3b x train_4k (worst "
+                         "roofline fraction) — iteration 1"),
+                        ("perf_lm_a2.json",
+                         "Cell 2 — iteration 2 (activation anchoring)"),
+                        ("perf_lm_a3.json",
+                         "Cell 2 — iteration 3 (ablation)"),
+                        ("perf_lm_b.json",
+                         "Cell 3 — nemotron-4-340b x train_4k (most "
+                         "collective-bound) — iteration 1"),
+                        ("perf_lm_b2.json",
+                         "Cell 3 — iteration 2 (native-dtype unembed: "
+                         "bf16 wire, f32 accumulation)")):
+        data = load(name)
+        if not data:
+            continue
+        out += [f"### {title}", "",
+                "| variant | HLO flops/dev | coll bytes/dev | terms |",
+                "|---|---|---|---|"]
+        for rec in data:
+            cc = rec.get("cost_corrected", {})
+            coll = sum(v for k, v in cc.items()
+                       if str(k).startswith("coll/"))
+            out.append(
+                f"| {rec.get('variant')} | {cc.get('flops', 0):.3g} |"
+                f" {coll/2**30:.1f} GiB | {_terms(rec)} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def optimized_section():
+    opt = load("dryrun_single_opt.json")
+    if not opt:
+        return ""
+    base = {(r["arch"], r["shape"]): r for r in load("dryrun_single.json")}
+    rows = []
+    for rec in opt:
+        r = analyze_record(rec)
+        if not r:
+            continue
+        b = analyze_record(base.get((rec["arch"], rec["shape"]), {}))
+        before = f"{b['roofline_frac']*100:.1f}%" if b else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {before} |"
+            f" {r['roofline_frac']*100:.1f}% |"
+            f" {fmt_s(r['t_compute_s'])} / {fmt_s(r['t_memory_s'])} /"
+            f" {fmt_s(r['t_collective_s'])} | **{r['bound']}** |"
+        )
+    return "\n".join([
+        "## §Roofline — optimized defaults (beyond-paper)", "",
+        "All cells re-swept on the single-pod mesh after adopting the "
+        "§Perf Cell-2 finding (`act_shard_seq=True` on every "
+        "attention/MoE/hybrid arch). Paper-faithful baselines remain in "
+        "§Roofline above; this table shows the shipping defaults.", "",
+        "| arch | shape | baseline frac | optimized frac | "
+        "compute/mem/coll | bound |",
+        "|---|---|---|---|---|---|",
+    ] + rows) + "\n"
+
+
+def main():
+    single = load("dryrun_single.json")
+    multi = load("dryrun_multi.json")
+    parts = [open(os.path.join(ROOT, "EXPERIMENTS.header.md")).read()
+             if os.path.exists(os.path.join(ROOT, "EXPERIMENTS.header.md"))
+             else "# EXPERIMENTS\n",
+             dryrun_section(single, multi),
+             roofline_section(single, multi),
+             optimized_section(),
+             perf_section()]
+    tail_p = os.path.join(ROOT, "EXPERIMENTS.tail.md")
+    if os.path.exists(tail_p):
+        parts.append(open(tail_p).read())
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""§Perf hillclimb driver for the hdp-pubmed cell (paper-representative).
+
+Runs the paper-faithful baseline and the beyond-paper variants through
+the dry-run, recording the roofline terms of each. Results feed
+EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.perf_hdp --out perf_hdp.json
+"""
+import argparse
+import json
+import time
+
+VARIANTS = [
+    # (label, kwargs)
+    ("baseline: paper-faithful dense Phi + (V,K) alias tables (f32)",
+     dict(z_impl="sparse", gather_tables=True, phi_dtype="f32")),
+    ("H2: bf16 Phi broadcast",
+     dict(z_impl="sparse", gather_tables=True, phi_dtype="bf16")),
+    ("H3: local table rebuild (gather Phi only)",
+     dict(z_impl="sparse", gather_tables=False, phi_dtype="f32")),
+    ("H3+H2: local rebuild + bf16 Phi",
+     dict(z_impl="sparse", gather_tables=False, phi_dtype="bf16")),
+    ("H1: word-sparse packed tables (pallas kernel, W=128)",
+     dict(z_impl="pallas", gather_tables=True, phi_dtype="f32", bucket=128)),
+    ("H1+H4: word-sparse + compact bf16/int16 tables",
+     dict(z_impl="pallas", gather_tables=True, phi_dtype="f32", bucket=128,
+          compact_tables=True)),
+]
+
+
+def main():
+    from repro.launch.dryrun import hdp_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="hdp-pubmed")
+    ap.add_argument("--out", default="perf_hdp.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    multi = args.mesh == "multi"
+    results = []
+    for label, kw in VARIANTS:
+        t0 = time.time()
+        try:
+            rec = hdp_cell(args.cell, multi, **kw)
+            rec["variant"] = label
+        except Exception as e:
+            rec = {"variant": label, "status": "error", "error": str(e)}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        coll = sum(rec.get("collectives", {}).values())
+        print(f"{label}: {rec.get('status')} coll={coll/1e6:.0f}MB "
+              f"({rec['wall_s']}s)", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""§Perf hillclimb driver for the two LM cells.
+
+Cell A — starcoder2-3b x train_4k (worst roofline fraction):
+  hypothesis: a 3B model with 24 heads cannot use a 16-way tensor axis;
+  attention/QKV run replicated over `model` (16x wasted FLOPs + the
+  (B,H,S,S) scores replicated). Variants re-purpose the model axis.
+
+Cell B — nemotron-4-340b x train_4k (most collective-bound):
+  hypothesis: the dominant collective traffic is activation resharding
+  from the sequence-parallel constraint, not FSDP weight gathers.
+  Variants move/remove the residual-carry constraint.
+
+  PYTHONPATH=src python -m benchmarks.perf_lm --cell A --out perf_lm_a.json
+"""
+
+import argparse
+import json
+import time
+
+CELLS = {
+    "A": ("starcoder2-3b", "train_4k", [
+        ("baseline: 16-way TP rules (heads unshardable)",
+         dict()),
+        ("V1: head_dim TP fallback (shard head_dim when heads do not divide)",
+         dict(rule_overrides={"head_dim": ("model",)})),
+        ("V2: DP-only layout (batch over data x model, FSDP over data)",
+         dict(rule_overrides={"batch": ("data", "model"),
+                              "heads": (), "kv_heads": (), "ffn": (),
+                              "vocab": (), "experts": (),
+                              "ssm_inner": (), "ssm_heads": ()})),
+        ("V3: DP-only + FSDP over both axes",
+         dict(rule_overrides={"batch": ("data", "model"),
+                              "heads": (), "kv_heads": (), "ffn": (),
+                              "vocab": (), "experts": (),
+                              "ssm_inner": (), "ssm_heads": (),
+                              "embed": ("data", "model")})),
+    ]),
+    "A2": ("starcoder2-3b", "train_4k", [
+        # iteration 2: the baseline's top collectives are FULL-batch f32
+        # partial-sum all-reduces of qkv/attention activations — nothing
+        # anchors batch sharding between layers. Anchor it.
+        ("V4: batch-anchored residual carry",
+         dict(act_mode="batch")),
+        ("V5: batch anchor + head_dim TP fallback",
+         dict(act_mode="batch", rule_overrides={"head_dim": ("model",)})),
+        ("V6: seq-parallel carry (Megatron-SP) + head_dim TP",
+         dict(act_mode="seq", rule_overrides={"head_dim": ("model",)})),
+    ]),
+    "B": ("nemotron-4-340b", "train_4k", [
+        ("baseline: sequence-parallel residual carry (act=seq)",
+         dict(act_mode="seq")),
+        ("V1: no carry constraint (XLA placement)",
+         dict(act_mode="none")),
+        ("V2: embed-sharded residual carry (act=embed)",
+         dict(act_mode="embed")),
+    ]),
+    "A3": ("starcoder2-3b", "train_4k", [
+        ("V7: seq-parallel carry alone (ablating head_dim TP out of V6)",
+         dict(act_mode="seq")),
+    ]),
+    "B2": ("nemotron-4-340b", "train_4k", [
+        ("V3: embed carry + native-dtype unembed (bf16 wire, f32 accum)",
+         dict(act_mode="embed")),
+        ("V4: seq carry + native-dtype unembed",
+         dict(act_mode="seq")),
+    ]),
+    "B3": ("nemotron-4-340b", "train_4k", [
+        ("V5: embed carry + bf16 backward barrier (bf16 weight gathers + grad reduce)",
+         dict(act_mode="embed")),
+        ("V6: seq carry + bf16 backward barrier",
+         dict(act_mode="seq")),
+    ]),
+}
+
+
+def main():
+    from repro.launch.dryrun import lm_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    arch, shape, variants = CELLS[args.cell]
+    multi = args.mesh == "multi"
+    results = []
+    for label, kw in variants:
+        t0 = time.time()
+        try:
+            rec = lm_cell(arch, shape, multi, **kw)
+            rec["variant"] = label
+        except Exception as e:
+            rec = {"variant": label, "status": "error", "error": str(e)}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        cc = rec.get("cost_corrected", {})
+        coll = sum(v for k, v in cc.items() if str(k).startswith("coll/"))
+        print(f"{label}: {rec.get('status')} flops={cc.get('flops', 0):.3g} "
+              f"coll={coll/1e9:.0f}GB ({rec['wall_s']}s)", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads the JSON written by launch/dryrun.py and derives, per (arch x
+shape x mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (task-specified constants). cost_analysis() on the SPMD-partitioned
+module reports per-device FLOPs/bytes; collective bytes are the
+per-device result-shape sums from launch/dryrun.py (convention noted
+there). MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(serve), whole-job, divided by chip count for the per-device ratio.
+
+  PYTHONPATH=src python -m benchmarks.roofline dryrun_single.json [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = MESH_CHIPS[rec["mesh"]]
+    corr = rec.get("cost_corrected", {})
+    if corr and "error" not in corr and corr.get("flops"):
+        # while-body-corrected probe (see launch/dryrun.py)
+        flops_dev = corr["flops"]
+        bytes_dev = corr.get("bytes accessed", 0.0)
+        if rec.get("collectives_exact"):
+            coll = rec.get("collectives", {})
+        else:
+            coll = {k[5:]: v for k, v in corr.items()
+                    if k.startswith("coll/")}
+        coll_dev = float(sum(coll.values()))
+        rec = dict(rec, collectives=coll)
+    else:
+        cost = rec.get("cost", {})
+        flops_dev = cost.get("flops", 0.0)
+        bytes_dev = cost.get("bytes accessed", 0.0)
+        coll_dev = float(sum(rec.get("collectives", {}).values()))
+    mem = rec.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0)
+           + mem.get("output_size_in_bytes", 0)
+           - mem.get("alias_size_in_bytes", 0))
+    t_compute = flops_dev / PEAK_FLOPS
+    # two memory estimates bracket reality: the capacity pass (every
+    # resident byte touched once — optimistic floor) and the op-level HLO
+    # bytes (cache/register-blind — pessimistic ceiling).
+    t_mem_floor = hbm / HBM_BW
+    t_mem_hlo = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_mem_floor,
+             "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    mf = rec.get("model_flops", 0.0)
+    mf_dev = mf / chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful model FLOPs per second achievable if the
+    # step ran at the max-term time (the score axis in §Perf)
+    step_time = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_mem_floor,
+        "t_memory_hlo_s": t_mem_hlo,
+        "t_collective_s": t_coll, "bound": bound,
+        "model_flops": mf, "hlo_flops_dev": flops_dev,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "hbm_bytes_dev": hbm,
+        "collectives": rec.get("collectives", {}),
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute | mem(floor) | mem(HLO) |"
+        " collective | bound | useful (6ND/HLO) | roofline frac | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} |"
+            f" {fmt_s(r['t_memory_hlo_s'])} |"
+            f" {fmt_s(r['t_collective_s'])} | **{r['bound']}** |"
+            f" {r['useful_ratio']*100:.0f}% | {r['roofline_frac']*100:.1f}% |"
+            f" {r['hbm_bytes_dev']/2**30:.2f} GiB |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    skipped = []
+    for f in args.json_files:
+        for rec in json.load(open(f)):
+            r = analyze_record(rec)
+            if r:
+                rows.append(r)
+            elif rec.get("status") == "skipped":
+                skipped.append(rec)
+    if args.md:
+        text = to_markdown(rows)
+    else:
+        text = json.dumps(rows, indent=1)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text)
+    print(text)
+    if skipped:
+        print(f"\nskipped cells: "
+              f"{[(s['arch'], s['shape'], s['mesh']) for s in skipped]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  bench_corpora            -> Table 2   (runtime per corpus; scaled
+                                         synthetic replicas, extrapolated
+                                         to published iteration counts)
+  bench_convergence        -> Fig 1 a,b,d,e (partially collapsed vs
+                                         direct-assignment baseline)
+  bench_iteration_scaling  -> Fig 1 i   (per-iteration time flat vs
+                                         topic growth)
+  bench_z_complexity       -> Section 2.8 complexity claim: z-step cost
+                                         vs K* for dense (O(K)) vs
+                                         doubly sparse (O(min(Kd,Kv)))
+  bench_l_binomial_trick   -> Section 2.6: l-step constant in D
+  bench_collective_bytes   -> DESIGN section 4: per-iteration gather
+                                         bytes, paper-faithful vs
+                                         word-sparse tables (§Perf)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hdp as H
+from repro.core.direct_assignment import DirectAssignmentHDP
+from repro.core.stick import sample_l
+from repro.data.synthetic import paper_corpus, planted_topics_corpus
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _chain(corpus, k, impl, iters, seed=0, bucket=64):
+    cfg = H.HDPConfig(K=k, V=corpus.V, bucket=bucket, z_impl=impl,
+                      hist_cap=min(corpus.max_len, 128))
+    tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
+    state = H.init_state(jax.random.key(seed), tokens, mask, cfg)
+    step = jax.jit(lambda s: H.gibbs_iteration(s, tokens, mask, cfg))
+    state = step(state)  # compile
+    jax.block_until_ready(state.z)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = step(state)
+    jax.block_until_ready(state.z)
+    return state, cfg, tokens, mask, (time.perf_counter() - t0) / iters
+
+
+def bench_corpora():
+    """Table 2: per-iteration runtime on (scaled) corpus replicas."""
+    rng = np.random.default_rng(0)
+    plan = [  # (corpus, scale, K*)
+        ("ap", 0.05, 100), ("cgcbib", 0.05, 100),
+        ("neurips", 0.01, 100), ("pubmed", 0.00002, 200),
+    ]
+    for name, scale, k in plan:
+        corpus = paper_corpus(name, rng, scale=scale, max_len=128)
+        _, _, _, _, sec = _chain(corpus, k, "sparse", iters=3)
+        emit(
+            f"corpora/{name}@{scale}", sec * 1e6,
+            f"tokens={corpus.num_tokens};tok_per_s={corpus.num_tokens/sec:.0f}",
+        )
+
+
+def bench_convergence():
+    """Fig 1 a,b,d,e: ours vs direct-assignment on one small corpus."""
+    rng = np.random.default_rng(1)
+    corpus, _ = planted_topics_corpus(rng, D=60, V=64, K_true=4,
+                                      doc_len=(15, 30))
+    iters = 40
+    t0 = time.perf_counter()
+    state, cfg, tokens, mask, _ = _chain(corpus, 32, "sparse", iters)
+    ours_s = time.perf_counter() - t0
+    ll = float(H.log_marginal_likelihood(state, tokens, mask, cfg))
+    emit("convergence/partially_collapsed", ours_s / iters * 1e6,
+         f"ll={ll:.0f};active={int(H.active_topics(state))}")
+
+    docs = [corpus.tokens[i][corpus.mask[i]] for i in range(corpus.num_docs)]
+    da = DirectAssignmentHDP(docs, V=corpus.V, K_max=32)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        da.iteration()
+    da_s = time.perf_counter() - t0
+    emit("convergence/direct_assignment", da_s / iters * 1e6,
+         f"ll={da.log_marginal_likelihood():.0f};active={da.active_topics()}")
+
+
+def bench_iteration_scaling():
+    """Fig 1 i: per-iteration time stays flat as topics accumulate."""
+    rng = np.random.default_rng(2)
+    corpus, _ = planted_topics_corpus(rng, D=120, V=96, K_true=6,
+                                      doc_len=(20, 40))
+    cfg = H.HDPConfig(K=64, V=corpus.V, bucket=64, z_impl="sparse",
+                      hist_cap=64)
+    tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
+    state = H.init_state(jax.random.key(0), tokens, mask, cfg)
+    step = jax.jit(lambda s: H.gibbs_iteration(s, tokens, mask, cfg))
+    state = step(state)
+    jax.block_until_ready(state.z)
+    for phase in range(3):
+        t0 = time.perf_counter()
+        for _ in range(10):
+            state = step(state)
+        jax.block_until_ready(state.z)
+        emit(f"iteration_scaling/phase{phase}",
+             (time.perf_counter() - t0) / 10 * 1e6,
+             f"active={int(H.active_topics(state))}")
+
+
+def bench_z_complexity():
+    """Section 2.8: dense z-step cost grows with K*; sparse stays flat."""
+    rng = np.random.default_rng(3)
+    corpus, _ = planted_topics_corpus(rng, D=60, V=64, K_true=4,
+                                      doc_len=(15, 30))
+    for k in (32, 128, 512):
+        for impl in ("dense", "sparse"):
+            _, _, _, _, sec = _chain(corpus, k, impl, iters=3)
+            emit(f"z_complexity/{impl}_K{k}", sec * 1e6, "")
+
+
+def bench_z_step_only():
+    """Section 2.8 claim, isolated: per-token z-step cost with PREBUILT
+    tables. Dense scales O(K*); the doubly sparse step's per-token work
+    is O(bucket + alias O(1)), flat in K*."""
+    rng = np.random.default_rng(5)
+    corpus, _ = planted_topics_corpus(rng, D=60, V=64, K_true=4,
+                                      doc_len=(15, 30))
+    tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
+    for k in (64, 256, 1024):
+        cfg = H.HDPConfig(K=k, V=corpus.V, bucket=32, z_impl="sparse",
+                          hist_cap=32)
+        state = H.init_state(jax.random.key(0), tokens, mask, cfg)
+        phi, _ = state.phi, state.varphi
+        from repro.core.hdp import (build_alias_tables, z_step_dense,
+                                    z_step_sparse_tables)
+
+        q_a, ap, al = build_alias_tables(phi, state.psi, cfg.alpha)
+        u = jax.random.uniform(jax.random.key(1), tokens.shape + (3,))
+        fd = jax.jit(lambda z: z_step_dense(tokens, mask, z, phi, state.psi,
+                                            cfg.alpha, u))
+        fs = jax.jit(lambda z: z_step_sparse_tables(
+            tokens, mask, z, phi, cfg.alpha, u, cfg.bucket, q_a, ap, al))
+        for name, f in (("dense", fd), ("sparse", fs)):
+            f(state.z).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(5):
+                f(state.z).block_until_ready()
+            emit(f"z_step_only/{name}_K{k}",
+                 (time.perf_counter() - t0) / 5 * 1e6, "")
+
+
+def bench_l_binomial_trick():
+    """Section 2.6: l-step cost constant in D (vs explicit-b O(N))."""
+    rng = np.random.default_rng(4)
+    for d_docs in (256, 1024, 4096):
+        m = jnp.asarray(rng.poisson(1.0, size=(d_docs, 64)).astype(np.int32))
+        dh = H.d_histogram(m, 64)
+        psi = jnp.asarray(rng.dirichlet(np.ones(64)).astype(np.float32))
+        f = jax.jit(lambda key: sample_l(key, dh, psi, 0.1))
+        f(jax.random.key(0)).block_until_ready()
+        t0 = time.perf_counter()
+        for i in range(20):
+            f(jax.random.key(i)).block_until_ready()
+        emit(f"l_binomial_trick/D{d_docs}",
+             (time.perf_counter() - t0) / 20 * 1e6, "")
+
+
+def bench_collective_bytes():
+    """DESIGN section 4: bytes each device must receive per iteration to
+    run the z-step, paper-faithful (full Phi + dense-K alias tables)
+    vs the word-sparse packed tables (beyond-paper §Perf variant)."""
+    k_star, v, w = 1000, 90112, 128
+    dense = k_star * v * 4 + 2 * v * k_star * 4 + v * 4
+    sparse = v * (2 * w * 4 + 2 * w * 4) + v * 4
+    emit("collective/paper_faithful_bytes", 0.0, f"{dense}")
+    emit("collective/word_sparse_bytes", 0.0,
+         f"{sparse};reduction={dense/sparse:.1f}x")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_corpora()
+    bench_convergence()
+    bench_iteration_scaling()
+    bench_z_complexity()
+    bench_z_step_only()
+    bench_l_binomial_trick()
+    bench_collective_bytes()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published LMConfig;
+``get_config(name, smoke=True)`` returns the reduced same-family config
+used by CPU smoke tests. ``ARCHS`` lists all assigned ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mamba2-780m",
+    "starcoder2-3b",
+    "qwen1.5-32b",
+    "chatglm3-6b",
+    "nemotron-4-340b",
+    "hymba-1.5b",
+    "deepseek-moe-16b",
+    "llama4-scout-17b-a16e",
+    "musicgen-medium",
+    "paligemma-3b",
+]
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def get_config(name: str, smoke: bool = False):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.CONFIG
+    return cfg.smoke() if smoke else cfg

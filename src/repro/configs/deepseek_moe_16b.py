@@ -1,0 +1,36 @@
+"""deepseek-moe-16b [moe] — fine-grained MoE (arXiv:2401.06066; hf).
+
+28L d_model=2048 16H (kv=16) vocab=102400; 64 routed experts (top-6,
+d_ff=1408 each) + 2 shared experts; SwiGLU; top-k gate renormalization
+per the paper. Deviation: the published model's first layer is a dense
+FFN — we keep a homogeneous MoE stack for scan-over-layers (noted).
+Full attention -> long_500k skipped.
+"""
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="deepseek-moe-16b",
+    block_type="moe",
+    mlp_type="swiglu",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=102400,
+    num_experts=64,
+    top_k=6,
+    expert_d_ff=1408,
+    shared_experts=2,
+    router_type="softmax",
+    # NOTE: carry anchoring (act_shard_seq) REGRESSES this arch 49x in
+    # compute — the top-6 fine-grained MoE dispatch (cumsum + scatter over
+    # T*K) trips the SPMD partitioner when the token stream is sharded.
+    # Measured in EXPERIMENTS.md §Perf; kept off.
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    loss_chunk=512,
+    source="arXiv:2401.06066 (hf tier); uniform MoE stack",
+)

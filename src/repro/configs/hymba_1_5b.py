@@ -1,0 +1,38 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads (arXiv:2411.13676; hf).
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16;
+every block runs attention heads and SSD heads in parallel on the same
+input and averages their outputs (the paper's parallel-head design).
+Deviations (noted per DESIGN.md): the published model mixes 3 global-
+attention layers among sliding-window layers and adds 128 meta tokens;
+we use a uniform 2048-token sliding window (scan-homogeneous stack) and
+no meta tokens. SWA + SSM state make it sub-quadratic -> long_500k runs.
+"""
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="hymba-1.5b",
+    block_type="hybrid",
+    mlp_type="swiglu",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    window=2048,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssd_chunk=128,
+    # §Perf Cell-2 finding: anchoring the residual carry
+    # (batch, model@seq) removes replicated compute and
+    # full-batch partial-sum all-reduces (EXPERIMENTS.md).
+    act_shard_seq=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    loss_chunk=512,
+    source="arXiv:2411.13676 (hf tier); uniform SWA + no meta tokens",
+)

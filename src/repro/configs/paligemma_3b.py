@@ -1,0 +1,33 @@
+"""paligemma-3b [vlm] — SigLIP + gemma (arXiv:2407.07726; hf).
+
+Gemma-2b text backbone: 18L d_model=2048 8H (MQA kv=1) d_ff=16384
+(GeGLU) vocab=257216, head_dim 256. The SigLIP vision tower is a stub —
+input_specs() provides 256 precomputed patch embeddings (prefix_len).
+Deviation: published model uses prefix-LM (bidirectional) attention on
+image tokens; we keep causal attention throughout (noted).
+Full attention -> long_500k skipped.
+"""
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="paligemma-3b",
+    block_type="dense",
+    mlp_type="geglu",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    prefix_len=256,
+    # §Perf Cell-2 finding: anchoring the residual carry
+    # (batch, model@seq) removes replicated compute and
+    # full-batch partial-sum all-reduces (EXPERIMENTS.md).
+    act_shard_seq=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    loss_chunk=256,
+    source="arXiv:2407.07726 (hf tier); causal attn on image prefix",
+)

@@ -1,0 +1,33 @@
+"""starcoder2-3b [dense] — GQA, RoPE (arXiv:2402.19173; hf).
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152; non-gated GELU
+MLP, attention bias per the HF config; rope_theta 1e5. The published
+model uses a 4096 sliding window in some variants — we run full causal
+attention per the 3b config and therefore skip long_500k (DESIGN.md
+§Arch-applicability).
+"""
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="starcoder2-3b",
+    block_type="dense",
+    mlp_type="gelu",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    qkv_bias=True,
+    rope_theta=100000.0,
+    # §Perf Cell-2 finding: anchoring the residual carry
+    # (batch, model@seq) removes replicated compute and
+    # full-batch partial-sum all-reduces (EXPERIMENTS.md).
+    act_shard_seq=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    loss_chunk=512,
+    source="arXiv:2402.19173 (hf tier)",
+)

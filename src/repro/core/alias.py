@@ -1,0 +1,174 @@
+"""Walker alias tables (Walker 1977; Vose 1991), vectorized for TPU.
+
+The paper folds the token-independent term (a) of the z full conditional,
+``phi[k, v] * alpha * Psi[k]``, into one alias table per word type v,
+rebuilt once per Gibbs iteration (Section 2.5).  Because Phi and Psi are
+*fixed* during the z-step under partial collapsing, the table is exact and
+no Metropolis-Hastings correction is required (unlike Li et al. 2014).
+
+Construction is the two-stack (small/large) Vose algorithm expressed as a
+``lax.scan`` of K O(1) steps, ``vmap``-ed over word types: K sequential
+steps each processing a full vocab-shard lane vector, which is the
+TPU-friendly layout (see DESIGN.md section 3).
+
+Sampling is deterministic given two uniforms: ``slot = floor(u1 * K)``,
+then ``select(u2 < prob[slot], slot, alias[slot])`` — two gathers and a
+select, O(1) per draw.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _alias_build_row(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Build one alias table from an unnormalized weight vector ``p`` (K,).
+
+    Returns (prob, alias): prob[j] is the probability that slot j keeps its
+    own index, alias[j] the donor index otherwise.
+    """
+    k = p.shape[0]
+    total = jnp.sum(p)
+    # Guard all-zero rows (e.g. padded vocab entries): fall back to uniform.
+    q = jnp.where(total > 0, p / jnp.maximum(total, 1e-30) * k, jnp.ones_like(p))
+
+    # Sort ascending; positions [0, boundary) are "small" (q < 1).
+    order = jnp.argsort(q)
+    q_sorted = q[order]
+
+    def step(carry, _):
+        q_cur, alias_cur, small_ptr, fifo, fifo_head, fifo_tail, g_ptr = carry
+
+        fifo_nonempty = fifo_head < fifo_tail
+        # Next small: prefer demoted-large FIFO entries, else sorted smalls.
+        sorted_small_ok = (
+            (~fifo_nonempty) & (small_ptr < g_ptr) & (q_cur[small_ptr] < 1.0)
+        )
+        s_pos = jnp.where(fifo_nonempty, fifo[fifo_head % k], small_ptr)
+        have_small = fifo_nonempty | sorted_small_ok
+        # Current large is at g_ptr (top of the sorted-descending large run).
+        g_pos = g_ptr
+        g_valid = (g_pos >= 0) & (q_cur[g_pos] >= 1.0)
+        do_pair = have_small & g_valid & (s_pos != g_pos)
+
+        qs = q_cur[s_pos]
+        qg = q_cur[g_pos]
+        new_qg = qg - (1.0 - qs)
+
+        alias_next = jnp.where(
+            do_pair, alias_cur.at[s_pos].set(g_pos), alias_cur
+        )
+        q_next = jnp.where(do_pair, q_cur.at[g_pos].set(new_qg), q_cur)
+
+        small_ptr_next = jnp.where(
+            do_pair & ~fifo_nonempty, small_ptr + 1, small_ptr
+        )
+        fifo_head_next = jnp.where(do_pair & fifo_nonempty, fifo_head + 1, fifo_head)
+
+        # If the large dropped below 1 it becomes small: demote and move g.
+        demote = do_pair & (new_qg < 1.0)
+        fifo_next = jnp.where(
+            demote, fifo.at[fifo_tail % k].set(g_pos), fifo
+        )
+        fifo_tail_next = jnp.where(demote, fifo_tail + 1, fifo_tail)
+        g_ptr_next = jnp.where(demote, g_ptr - 1, g_ptr)
+
+        return (
+            q_next,
+            alias_next,
+            small_ptr_next,
+            fifo_next,
+            fifo_head_next,
+            fifo_tail_next,
+            g_ptr_next,
+        ), None
+
+    alias0 = jnp.arange(k, dtype=jnp.int32)
+    fifo0 = jnp.zeros((k,), dtype=jnp.int32)
+    carry0 = (
+        q_sorted,
+        alias0,
+        jnp.int32(0),
+        fifo0,
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(k - 1),
+    )
+    (q_fin, alias_sorted, *_), _ = jax.lax.scan(step, carry0, None, length=k)
+
+    # Any residue (fp error / unresolved) keeps its own slot.
+    prob_sorted = jnp.clip(q_fin, 0.0, 1.0)
+
+    # Un-sort back to original topic indices.
+    inv = jnp.zeros((k,), dtype=jnp.int32).at[order].set(
+        jnp.arange(k, dtype=jnp.int32)
+    )
+    prob = prob_sorted[inv]
+    alias = order[alias_sorted[inv]]
+    return prob.astype(jnp.float32), alias.astype(jnp.int32)
+
+
+@functools.partial(jax.jit)
+def alias_build(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vectorized alias build.
+
+    p: (..., K) unnormalized weights — one table per leading index.
+    Returns (prob, alias) with the same leading shape.
+    """
+    flat = p.reshape((-1, p.shape[-1]))
+    prob, alias = jax.vmap(_alias_build_row)(flat)
+    return prob.reshape(p.shape), alias.reshape(p.shape)
+
+
+def alias_sample(
+    prob: jax.Array, alias: jax.Array, u1: jax.Array, u2: jax.Array
+) -> jax.Array:
+    """Draw indices from alias tables, deterministically given uniforms.
+
+    prob/alias: (K,) single table, u1/u2 broadcastable uniforms in [0,1).
+    """
+    k = prob.shape[-1]
+    slot = jnp.minimum((u1 * k).astype(jnp.int32), k - 1)
+    keep = u2 < prob[slot]
+    return jnp.where(keep, slot, alias[slot]).astype(jnp.int32)
+
+
+def alias_build_np(p: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Reference numpy Vose construction (oracle for tests)."""
+    p = np.asarray(p, dtype=np.float64)
+    k = p.shape[0]
+    total = p.sum()
+    if total <= 0:
+        q = np.ones(k)
+    else:
+        q = p / total * k
+    prob = np.zeros(k)
+    alias = np.arange(k, dtype=np.int64)
+    small = [i for i in range(k) if q[i] < 1.0]
+    large = [i for i in range(k) if q[i] >= 1.0]
+    q = q.copy()
+    while small and large:
+        s = small.pop()
+        g = large.pop()
+        prob[s] = q[s]
+        alias[s] = g
+        q[g] = q[g] - (1.0 - q[s])
+        if q[g] < 1.0:
+            small.append(g)
+        else:
+            large.append(g)
+    for g in large:
+        prob[g] = 1.0
+    for s in small:  # fp residue
+        prob[s] = 1.0
+    return prob.astype(np.float32), alias.astype(np.int32)
+
+
+def alias_sample_np(prob, alias, u1, u2):
+    k = prob.shape[0]
+    slot = min(int(u1 * k), k - 1)
+    return int(slot if u2 < prob[slot] else alias[slot])

@@ -1,0 +1,262 @@
+"""Data-parallel HDP Gibbs iteration on a (pod, data, model) mesh.
+
+Mapping of the paper's parallelism (DESIGN.md section 4):
+
+  * documents  -> sharded over EVERY mesh axis (the z-step is
+                  embarrassingly parallel over documents; parallelism
+                  scales with D, the paper's key scalability claim);
+  * n, Phi     -> vocabulary-sharded over the `model` axis, replicated
+                  over (pod, data). The PPU Phi-step and alias-table
+                  build are `model`-parallel over vocab shards;
+  * Psi, l     -> replicated; their samplers are O(K*) and use identical
+                  keys on every device (deterministic replication).
+
+Collective schedule per iteration (the roofline terms in EXPERIMENTS.md
+are derived from exactly these):
+
+  1. psum(row sums)                       [model]        K * 4B
+  2. all_gather(phi_shard)                [model]        K*V*4B / dev
+  3. all_gather(q_a, alias prob/idx)      [model]        ~2 K*V / dev
+  4. local z-step                         none
+  5. psum_scatter(n_local)                [model]        K*V*4B
+  6. psum(n_vshard)                       [pod, data]    K*V/M * 4B
+  7. psum(d_hist)                         [all]          K*(P+1)*4B
+
+Baseline = paper-faithful replicated-Phi pattern (MALLET shared memory ->
+all_gather). The config flags `gather_tables` / `phi_dtype` select the
+beyond-paper optimized variants measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hdp as H
+from repro.core.alias import alias_build
+from repro.core.stick import sample_l, sample_psi
+
+
+class ShardedHDP:
+    """Mesh-aware HDP sampler. All state arrays keep *global* shapes;
+    NamedShardings describe placement, shard_map makes collectives
+    explicit."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: H.HDPConfig,
+        *,
+        doc_axes: Sequence[str] | None = None,
+        model_axis: str = "model",
+        gather_tables: bool = True,
+        phi_dtype: jnp.dtype = jnp.float32,
+        compact_tables: bool = False,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.model_axis = model_axis
+        axis_names = list(mesh.axis_names)
+        if doc_axes is None:
+            doc_axes = tuple(axis_names)  # shard docs over every axis
+        self.doc_axes = tuple(doc_axes)
+        self.repl_axes = tuple(a for a in axis_names if a != model_axis)
+        self.gather_tables = gather_tables
+        self.phi_dtype = phi_dtype
+        self.compact_tables = compact_tables
+        if cfg.V % mesh.shape[model_axis]:
+            raise ValueError(
+                f"V={cfg.V} must divide model axis {mesh.shape[model_axis]}"
+            )
+
+    # -- sharding specs ---------------------------------------------------
+    def specs(self) -> dict[str, P]:
+        da = self.doc_axes if len(self.doc_axes) > 1 else self.doc_axes[0]
+        return dict(
+            z=P(da, None),
+            tokens=P(da, None),
+            mask=P(da, None),
+            n=P(None, self.model_axis),
+            phi=P(None, self.model_axis),
+            varphi=P(None, self.model_axis),
+            psi=P(),
+            l=P(),
+            key=P(),
+            it=P(),
+        )
+
+    def state_shardings(self) -> H.HDPState:
+        s = self.specs()
+        ns = lambda p: NamedSharding(self.mesh, p)
+        return H.HDPState(
+            z=ns(s["z"]), n=ns(s["n"]), phi=ns(s["phi"]),
+            varphi=ns(s["varphi"]), psi=ns(s["psi"]), l=ns(s["l"]),
+            key=ns(s["key"]), it=ns(s["it"]),
+        )
+
+    def corpus_shardings(self):
+        s = self.specs()
+        return (
+            NamedSharding(self.mesh, s["tokens"]),
+            NamedSharding(self.mesh, s["mask"]),
+        )
+
+    # -- the iteration ----------------------------------------------------
+    def _local_iteration(self, z, tokens, mask, n_shard, psi, l, key, it):
+        cfg = self.cfg
+        maxis = self.model_axis
+        key, k_phi, k_u, k_l, k_psi = jax.random.split(key, 5)
+        midx = jax.lax.axis_index(maxis)
+        dev_idx = jax.lax.axis_index(tuple(self.mesh.axis_names))
+
+        # 1. Phi-step: PPU on the local vocab shard (model-parallel).
+        #    Same key within a model column -> replicated over (pod, data).
+        varphi_shard = jax.random.poisson(
+            jax.random.fold_in(k_phi, midx),
+            n_shard.astype(jnp.float32) + cfg.beta,
+            dtype=jnp.int32,
+        )
+        row_local = jnp.sum(varphi_shard, axis=1).astype(jnp.float32)
+        row = jax.lax.psum(row_local, maxis)  # (K,)
+        phi_shard = (
+            varphi_shard.astype(jnp.float32) / jnp.maximum(row[:, None], 1.0)
+        ).astype(self.phi_dtype)
+
+        # 2./3. Replicate the z-step operands.
+        if cfg.z_impl == "pallas":
+            # Word-sparse tables built model-parallel on the vocab shard,
+            # then gathered: (V, W) instead of the paper's (K, V) Phi
+            # broadcast — a W/K communication saving (§Perf).
+            from repro.kernels.hdp_z import ops as zops
+
+            q_a_s, fpack_s, ipack_s = zops.build_word_sparse_tables(
+                phi_shard.astype(jnp.float32), psi, cfg.alpha, cfg.bucket,
+                compact=self.compact_tables,
+            )
+            q_a = jax.lax.all_gather(q_a_s, maxis, axis=0, tiled=True)
+            fpack = jax.lax.all_gather(fpack_s, maxis, axis=0, tiled=True)
+            ipack = jax.lax.all_gather(ipack_s, maxis, axis=0, tiled=True)
+            u = jax.random.uniform(
+                jax.random.fold_in(k_u, dev_idx),
+                tokens.shape + (3,),
+                jnp.float32,
+            )
+            z = zops.hdp_z_pallas(
+                tokens, mask, z, u, q_a, fpack, ipack, kk=cfg.K,
+                interpret=True,
+            )
+            return self._finish_iteration(
+                z, tokens, mask, phi_shard, varphi_shard, psi, key, it,
+                k_l, k_psi,
+            )
+
+        # keep the gathered Phi in phi_dtype: converting to f32 here lets
+        # XLA hoist the convert BEFORE the all-gather, doubling the wire
+        # bytes (verified on HLO). The z-step promotes per-op instead.
+        phi = jax.lax.all_gather(phi_shard, maxis, axis=1, tiled=True)
+        if self.gather_tables:
+            wa = (phi_shard.astype(jnp.float32) * (cfg.alpha * psi)[:, None]).T
+            qa_shard = jnp.sum(wa, axis=1)
+            prob_shard, alias_shard = alias_build(wa)
+            q_a = jax.lax.all_gather(qa_shard, maxis, axis=0, tiled=True)
+            aprob = jax.lax.all_gather(prob_shard, maxis, axis=0, tiled=True)
+            aalias = jax.lax.all_gather(alias_shard, maxis, axis=0, tiled=True)
+        else:
+            # beyond-paper variant: rebuild tables redundantly from the
+            # gathered Phi — trades (V,K) fp32+int32 gather for local compute.
+            wa = (phi * (cfg.alpha * psi)[:, None]).T
+            q_a = jnp.sum(wa, axis=1)
+            aprob, aalias = alias_build(wa)
+
+        # 4. z-step on the local document shard (no communication).
+        u = jax.random.uniform(
+            jax.random.fold_in(k_u, dev_idx), tokens.shape + (3,), jnp.float32
+        )
+        if cfg.z_impl == "dense":
+            z = H.z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, u,
+                               unroll=cfg.unroll_z)
+        else:
+            z = H.z_step_sparse_tables(
+                tokens, mask, z, phi, cfg.alpha, u, cfg.bucket,
+                q_a, aprob, aalias, unroll=cfg.unroll_z,
+            )
+        return self._finish_iteration(
+            z, tokens, mask, phi_shard, varphi_shard, psi, key, it, k_l, k_psi
+        )
+
+    def _finish_iteration(
+        self, z, tokens, mask, phi_shard, varphi_shard, psi, key, it,
+        k_l, k_psi,
+    ):
+        """Steps 5-7: sufficient statistics + l-step + Psi-step."""
+        cfg = self.cfg
+        maxis = self.model_axis
+
+        # 5./6. topic-word statistic: reduce-scatter over model, then
+        #       all-reduce over the replication axes.
+        n_local = H.count_n(z, tokens, mask, cfg.K, cfg.V)
+        n_shard = jax.lax.psum_scatter(
+            n_local, maxis, scatter_dimension=1, tiled=True
+        )
+        if self.repl_axes:
+            n_shard = jax.lax.psum(n_shard, self.repl_axes)
+
+        # 7. l and Psi: replicated-deterministic (same key everywhere).
+        m = H.doc_topic_counts(z, mask, cfg.K)
+        dh = H.d_histogram(m, cfg.hist_cap)
+        dh = jax.lax.psum(dh, tuple(self.mesh.axis_names))
+        l = sample_l(k_l, dh, psi, cfg.alpha)
+        psi = sample_psi(k_psi, l, cfg.gamma)
+
+        return z, n_shard, phi_shard, varphi_shard, psi, l, key, it + 1
+
+    def iteration_fn(self):
+        s = self.specs()
+        state_in = (
+            s["z"], s["tokens"], s["mask"], s["n"], s["psi"], s["l"],
+            s["key"], s["it"],
+        )
+        state_out = (
+            s["z"], s["n"], s["phi"], s["varphi"], s["psi"], s["l"],
+            s["key"], s["it"],
+        )
+        fn = jax.shard_map(
+            self._local_iteration,
+            mesh=self.mesh,
+            in_specs=state_in,
+            out_specs=state_out,
+            check_vma=False,
+        )
+
+        def iteration(state: H.HDPState, tokens, mask) -> H.HDPState:
+            z, n, phi, varphi, psi, l, key, it = fn(
+                state.z, tokens, mask, state.n, state.psi, state.l,
+                state.key, state.it,
+            )
+            return H.HDPState(
+                z=z, n=n, phi=phi, varphi=varphi, psi=psi, l=l, key=key, it=it
+            )
+
+        return iteration
+
+    def jit_iteration(self):
+        ss = self.state_shardings()
+        ts, ms = self.corpus_shardings()
+        return jax.jit(
+            self.iteration_fn(),
+            in_shardings=(ss, ts, ms),
+            out_shardings=ss,
+            donate_argnums=(0,),
+        )
+
+    # -- state construction -------------------------------------------------
+    def init_state(self, key, tokens, mask) -> H.HDPState:
+        """Single-topic init (paper Section 3) with proper placement."""
+        cfg = self.cfg
+        state = H.init_state(key, tokens, mask, cfg)
+        ss = self.state_shardings()
+        return jax.tree.map(jax.device_put, state, ss)

@@ -1,0 +1,104 @@
+"""Stick-breaking posterior for the global topic distribution Psi and the
+binomial-trick sampler for its sufficient statistic l.
+
+Paper Proposition 1: under Psi ~ GEM(gamma) and a discrete likelihood with
+empirical counts l, the posterior is stick-breaking with
+
+    sigma_k ~ Beta(1 + l_k, gamma + sum_{i>k} l_i),   Psi_k = sigma_k prod_{i<k}(1 - sigma_i)
+
+Finite truncation (Section 2.4): deterministically set sigma_{K*} = 1
+(FGEM) — the flag topic K* absorbs the tail; a.s. convergent as K* grows
+(Ishwaran & James 2001).
+
+Paper Section 2.6 ("binomial trick"): rather than sampling one Bernoulli
+b_{i,d} per token (O(N) memory/time), sample l directly:
+
+    l_k = sum_{j=1..max_d m_{d,k}} Binomial(D_{k,j}, Psi_k a / (Psi_k a + j - 1))
+
+where D_{k,j} = #documents with m_{d,k} >= j, computed as the reverse
+cumulative sum over the document-size histogram d_{k,p}.  Complexity is
+constant in D and N — it depends only on (K*, max_d N_d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_l(
+    key: jax.Array, d_hist: jax.Array, psi: jax.Array, alpha: float
+) -> jax.Array:
+    """Binomial-trick draw of l.
+
+    d_hist: (K, P+1) int32 — d_hist[k, p] = #docs with m_{d,k} == p
+            (column 0 is unused/zero; P = max tokens per doc per topic).
+    psi:    (K,) current global topic distribution.
+    Returns l: (K,) int32.
+    """
+    kk, pp1 = d_hist.shape
+    # D_{k,j} = sum_{p >= j} d_hist[k, p]  (reverse cumulative sum).
+    d_geq = jnp.cumsum(d_hist[:, ::-1], axis=1)[:, ::-1]  # (K, P+1)
+    j = jnp.arange(pp1, dtype=jnp.float32)  # j = 0 .. P; use columns 1..P
+    rate = psi[:, None] * jnp.float32(alpha)  # (K, 1)
+    p_j = rate / (rate + jnp.maximum(j[None, :] - 1.0, 0.0))  # j=1 -> prob 1
+    p_j = jnp.clip(p_j, 0.0, 1.0)
+    counts = d_geq.astype(jnp.float32)
+    draws = jax.random.binomial(key, counts, p_j)  # (K, P+1) float
+    draws = jnp.where(jnp.arange(pp1)[None, :] >= 1, draws, 0.0)
+    return jnp.sum(draws, axis=1).astype(jnp.int32)
+
+
+def sample_l_via_b_np(rng, m: "np.ndarray", psi, alpha):  # pragma: no cover
+    """Oracle: explicit per-token Bernoulli b sampling (paper eq. 26-27).
+
+    m: (D, K) per-document topic counts. Used only in tests to verify the
+    binomial trick is distributionally identical.
+    """
+    import numpy as np
+
+    d_docs, kk = m.shape
+    l = np.zeros(kk, dtype=np.int64)
+    for d in range(d_docs):
+        for k in range(kk):
+            for jdx in range(1, int(m[d, k]) + 1):
+                p = psi[k] * alpha / (psi[k] * alpha + jdx - 1)
+                if rng.random() < p:
+                    l[k] += 1
+    return l
+
+
+def sample_psi(
+    key: jax.Array, l: jax.Array, gamma: float
+) -> jax.Array:
+    """FGEM stick-breaking posterior draw of Psi given l (Prop. 1 + trunc).
+
+    l: (K,) counts. Returns Psi: (K,) summing to 1, with the final index
+    K* acting as the flag topic (sigma_{K*} = 1).
+    """
+    kk = l.shape[0]
+    lf = l.astype(jnp.float32)
+    a = 1.0 + lf
+    # tail[k] = sum_{i>k} l_i
+    tail = jnp.cumsum(lf[::-1])[::-1] - lf
+    b = jnp.float32(gamma) + tail
+    sigma = jax.random.beta(key, a, b)
+    sigma = jnp.clip(sigma, 1e-30, 1.0 - 1e-7)
+    sigma = sigma.at[kk - 1].set(1.0)  # flag-topic truncation
+    # Psi_k = sigma_k * prod_{i<k} (1 - sigma_i); stable in log space.
+    log1m = jnp.log1p(-sigma)
+    log1m = jnp.where(jnp.arange(kk) == kk - 1, 0.0, log1m)  # exclude own term via roll
+    cum = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(log1m)[:-1]])
+    psi = sigma * jnp.exp(cum)
+    return psi / jnp.sum(psi)
+
+
+def gem_prior_sample(key: jax.Array, k: int, gamma: float) -> jax.Array:
+    """Draw Psi ~ FGEM(gamma, K) from the prior (for initialization)."""
+    sigma = jax.random.beta(key, jnp.ones((k,)), jnp.full((k,), gamma))
+    sigma = sigma.at[k - 1].set(1.0)
+    log1m = jnp.log1p(-jnp.clip(sigma, 0.0, 1.0 - 1e-7))
+    log1m = jnp.where(jnp.arange(k) == k - 1, 0.0, log1m)
+    cum = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(log1m)[:-1]])
+    psi = sigma * jnp.exp(cum)
+    return psi / jnp.sum(psi)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (GQA, causal, optional sliding window).
+
+Canonical three-level grid (batch*q_heads, q_blocks, kv_blocks) with the
+online-softmax running (m, l, acc) state in VMEM scratch. GQA is handled
+in the BlockSpec index maps: kv blocks are fetched from head h // group.
+Block shapes are MXU-aligned (q/kv block x head_dim, multiples of 128
+recommended); the f32 accumulator lives in VMEM scratch across kv steps.
+
+Sliding-window masking (used by the hymba config's local-attention
+layers) composes with the causal mask; fully-masked kv blocks are
+skipped via pl.when so the work per q block is O(window), the
+sub-quadratic mode required for long-context shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, block_q: int, block_k: int, causal: bool,
+    window: int | None, num_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip kv blocks that the causal/window mask eliminates entirely.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = run & (k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq len {s} must divide block sizes")
+    nq, nk = s // block_q, s // block_k
+    scale = d ** -0.5
+
+    grid = (b * hq, nq, nk)
+    q_spec = pl.BlockSpec(
+        (1, 1, block_q, d), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)
+    )
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_k, d),
+        lambda bh, qi, ki: (bh // hq, (bh % hq) // group, ki, 0),
+    )
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+            causal=causal, window=window, num_kv_blocks=nk,
+        ),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""jit'd entry points for attention: kernel on TPU-shaped paths, oracle
+fallback where Pallas is not applicable (tiny/ragged test shapes)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_chunked, attention_ref
+
+# Above this sequence length the pure-XLA path switches to query-chunked
+# (flash-style) attention so (S, S) score tensors are never materialized.
+CHUNKED_THRESHOLD = 8192
+
+
+def mha(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    use_kernel: bool = False, block_q: int = 128, block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA attention over (B, H, S, D) tensors.
+
+    ``use_kernel`` selects the Pallas flash kernel (validated in
+    interpret mode on CPU; compiled on TPU). The default jnp path lowers
+    to an XLA fused attention which is what the dry-run/roofline uses —
+    the kernel exists for the TPU perf path and is swept against the
+    oracle in tests.
+    """
+    if use_kernel:
+        return flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    if q.shape[2] >= CHUNKED_THRESHOLD:
+        return attention_chunked(q, k, v, causal=causal, window=window)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for flash attention (dense softmax attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). GQA via head repetition."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None, q_chunk=1024):
+    """Query-chunked attention: O(q_chunk * S) score memory (XLA-level
+    flash). Used for long-sequence prefill where dense (S, S) scores per
+    head would not fit. Differentiable, exact."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if s % q_chunk:
+        q_chunk = s  # fallback: single chunk
+    nq = s // q_chunk
+    scale = d ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(s)
+
+    def one_chunk(args):
+        qc, start = args  # (B, H, qc, D), scalar
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32), kf)
+        logits = logits * scale
+        qpos = start + jnp.arange(q_chunk)
+        m = jnp.ones((q_chunk, s), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(m, logits, -1e30)
+        p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+        p = jnp.where(m, p, 0.0)
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+
+    qs = q.reshape(b, hq, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    starts = jnp.arange(nq) * q_chunk
+    outs = jax.lax.map(one_chunk, (qs, starts))  # (nq, B, H, qc, D)
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, s, d).astype(q.dtype)

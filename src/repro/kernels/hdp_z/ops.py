@@ -1,0 +1,83 @@
+"""jit'd wrappers + table builders for the hdp_z kernel.
+
+``build_word_sparse_tables`` converts a (K, V) Phi into the kernel's
+word-sparse layout: per word type, the top-W topics by phi value (== the
+non-zero set when W >= max column nnz, which the PPU draw makes small),
+the per-word alias table over those W slots, and the term-(a) mass q_a.
+
+In the sharded sampler the tables are built model-parallel on vocab
+shards and all-gathered — (V, W) tables instead of the paper's dense
+(K, V) Phi broadcast, a W/K communication saving (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alias import alias_build
+from repro.kernels.hdp_z.hdp_z import hdp_z_pallas
+from repro.kernels.hdp_z.ref import hdp_z_ref
+
+
+@functools.partial(jax.jit, static_argnames=("w", "compact"))
+def build_word_sparse_tables(
+    phi: jax.Array, psi: jax.Array, alpha: float, w: int,
+    compact: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q_a (V,), fpack (V,2,W), ipack (V,2,W)).
+
+    Exact when every word appears in <= W topics; otherwise the smallest
+    phi entries beyond W are dropped (checked by ``max_column_nnz``).
+
+    ``compact=True`` packs fpack in bf16 and ipack in int16 (valid for
+    K* < 32768), halving the table broadcast — the §Perf "compact tables"
+    variant. bf16 phi values only perturb sampling weights ~1e-3
+    relatively, within the PPU approximation's own error.
+    """
+    pt = phi.T  # (V, K)
+    w = min(w, phi.shape[0])
+    vals, idx = jax.lax.top_k(pt, w)
+    ids = idx.astype(jnp.int32)
+    wa = vals * (jnp.float32(alpha) * psi)[ids]
+    q_a = jnp.sum(wa, axis=-1)
+    aprob, aalias = alias_build(wa)
+    if compact:
+        fpack = jnp.stack(
+            [vals.astype(jnp.bfloat16), aprob.astype(jnp.bfloat16)], axis=1
+        )
+        ipack = jnp.stack(
+            [ids.astype(jnp.int16), aalias.astype(jnp.int16)], axis=1
+        )
+    else:
+        fpack = jnp.stack([vals.astype(jnp.float32), aprob], axis=1)
+        ipack = jnp.stack([ids, aalias.astype(jnp.int32)], axis=1)
+    return q_a.astype(jnp.float32), fpack, ipack
+
+
+def max_column_nnz(phi: jax.Array) -> jax.Array:
+    """Largest number of topics any single word appears in (for choosing W)."""
+    return jnp.max(jnp.sum((phi > 0).astype(jnp.int32), axis=0))
+
+
+def z_step_pallas(
+    tokens, mask, z, phi, psi, alpha, uniforms, bucket, *, interpret=True
+):
+    """Drop-in z-step: builds tables then runs the kernel (W = bucket)."""
+    q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
+    return hdp_z_pallas(
+        tokens, mask, z, uniforms, q_a, fpack, ipack,
+        kk=phi.shape[0], interpret=interpret,
+    )
+
+
+def z_step_ref(
+    tokens, mask, z, phi, psi, alpha, uniforms, bucket
+):
+    """Same math via the pure-jnp oracle (bitwise-identical to the kernel)."""
+    q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
+    return hdp_z_ref(
+        tokens, mask, z, uniforms, q_a, fpack, ipack, kk=phi.shape[0]
+    )

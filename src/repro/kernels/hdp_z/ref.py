@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the hdp_z Pallas kernel.
+
+Identical math over the identical word-sparse tables consuming the
+identical uniforms — tests assert *bitwise* equality of the sampled z
+against the kernel in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hdp_z_ref(
+    tokens: jax.Array,    # (D, L) int32
+    mask: jax.Array,      # (D, L) bool
+    z: jax.Array,         # (D, L) int32
+    uniforms: jax.Array,  # (D, L, 3) f32
+    q_a: jax.Array,       # (V,) f32
+    fpack: jax.Array,     # (V, 2, W) f32
+    ipack: jax.Array,     # (V, 2, W) int32
+    *,
+    kk: int,
+) -> jax.Array:
+    w = fpack.shape[-1]
+
+    def doc_sweep(tok_d, msk_d, z_d, u_d):
+        m = jnp.zeros((kk,), jnp.int32).at[jnp.where(msk_d, z_d, 0)].add(
+            msk_d.astype(jnp.int32)
+        )
+
+        def body(i, carry):
+            z_d, m = carry
+            v = tok_d[i]
+            live = msk_d[i]
+            z_old = z_d[i]
+            m = m.at[z_old].add(-jnp.where(live, 1, 0))
+
+            vals = fpack[v, 0, :].astype(jnp.float32)
+            aprob = fpack[v, 1, :].astype(jnp.float32)
+            ids = ipack[v, 0, :].astype(jnp.int32)
+            aalias = ipack[v, 1, :].astype(jnp.int32)
+
+            mb = m[ids].astype(jnp.float32)
+            wb = vals * mb
+            qb = jnp.sum(wb)
+            qa = q_a[v]
+            tot = qa + qb
+
+            u1, u2, u3 = u_d[i, 0], u_d[i, 1], u_d[i, 2]
+            t = u1 * tot
+
+            c = jnp.cumsum(wb)
+            slot_b = jnp.minimum(jnp.sum((c < t).astype(jnp.int32)), w - 1)
+            k_doc = ids[slot_b]
+
+            slot_a = jnp.minimum((u2 * w).astype(jnp.int32), w - 1)
+            keep = u3 < aprob[slot_a]
+            slot_a = jnp.where(keep, slot_a, aalias[slot_a])
+            k_glob = ids[slot_a]
+
+            doc_branch = (t < qb) | (qa <= 0.0)
+            k_new = jnp.where(doc_branch, k_doc, k_glob)
+            k_new = jnp.where(live & (tot > 0), k_new, z_old).astype(jnp.int32)
+
+            m = m.at[k_new].add(jnp.where(live, 1, 0))
+            return z_d.at[i].set(k_new), m
+
+        z_d, _ = jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
+        return z_d
+
+    return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)

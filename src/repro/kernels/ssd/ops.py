@@ -1,0 +1,145 @@
+"""SSD entry point: Pallas intra-chunk kernel + jnp inter-chunk scan.
+
+y_t = y_intra_t + C_t (decay_from_chunk_start_t * h_chunkstart)
+
+The inter-chunk state recurrence over NC = S/CL chunks:
+
+  H_c = exp(sum_chunk a) H_{c-1} + st_c
+
+is a short lax.scan over small (N, P) states.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_intra_chunk
+from repro.kernels.ssd.ref import ssd_ref  # noqa: F401  (re-export for tests)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, h0=None, *, chunk: int = 64):
+    """Vectorized (loop-free) chunked SSD — identical math to the Pallas
+    kernel, batched over chunks with einsums. This is the XLA production
+    path for training (MXU-friendly, no sequential scan except the tiny
+    NC-length state recurrence) and the basis of the roofline cost probes
+    (while-loop bodies are invisible to cost_analysis; see launch/dryrun).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 padding steps are identities: decay exp(0)=1, update 0 —
+        # the final state is unaffected and padded outputs are sliced off.
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, bmat, cmat = zp(x), zp(dt), zp(bmat), zp(cmat)
+    s_p = s + pad
+    nc = s_p // chunk
+    cl = chunk
+    xr = x.reshape(b, nc, cl, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, cl, h).astype(jnp.float32)
+    br = bmat.reshape(b, nc, cl, h, n).astype(jnp.float32)
+    cr = cmat.reshape(b, nc, cl, h, n).astype(jnp.float32)
+
+    aa = dtr * a[None, None, None, :]            # (b,nc,cl,h) log decays
+    cum = jnp.cumsum(aa, axis=2)                 # inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,cl,cl,h)
+    ii = jnp.arange(cl)
+    tri = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: above the diagonal seg > 0 (cum is decreasing), so
+    # exp would overflow and poison the where-gradient (0 * inf = NaN).
+    ldec = jnp.exp(jnp.where(tri, seg, -1e30))
+    xdt = xr * dtr[..., None]                    # (b,nc,cl,h,p)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cr, br) * ldec
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,cl,h)
+    st = jnp.einsum("bcjhn,bcjhp->bchnp", br * decay_end[..., None], xdt)
+    cdecay = jnp.exp(cum[:, :, -1, :])            # (b,nc,h)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def scan_step(hprev, inp):
+        st_c, dec_c = inp
+        return hprev * dec_c[:, :, None, None] + st_c, hprev
+
+    hf, hstarts = jax.lax.scan(
+        scan_step, h0,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(cdecay, 1, 0)),
+    )
+    hstarts = jnp.moveaxis(hstarts, 0, 1)         # (b,nc,h,n,p)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", cr, hstarts) * jnp.exp(
+        cum
+    )[..., None]
+    y = (y_intra + y_inter).reshape(b, s_p, h, p)[:, :s]
+    return y.astype(x.dtype), hf
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)
+    a: jax.Array,    # (H,)
+    bmat: jax.Array,  # (B, S, H, N)
+    cmat: jax.Array,  # (B, S, H, N)
+    h0: jax.Array | None = None,  # (B, H, N, P)
+    *,
+    chunk: int = 64,
+    use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """Chunked SSD. Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    if not use_kernel:
+        return ssd_ref(x, dt, a, bmat, cmat, h0)
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    y_intra, st, dec = ssd_intra_chunk(
+        x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret
+    )
+
+    # chunk-level decays: exp(sum of a over chunk) per (B, NC, H)
+    a_steps = dt.astype(jnp.float32) * a[None, None, :]
+    chunk_log = a_steps.reshape(b, nc, chunk, h).sum(axis=2)  # (B,NC,H)
+    cdecay = jnp.exp(chunk_log)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def scan_step(hprev, inp):
+        st_c, dec_c = inp  # (B,H,N,P), (B,H)
+        hstart = hprev  # state at chunk start
+        hnew = hprev * dec_c[:, :, None, None] + st_c
+        return hnew, hstart
+
+    hf, hstarts = jax.lax.scan(
+        scan_step, h0,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(cdecay, 1, 0)),
+    )  # hstarts: (NC, B, H, N, P)
+    hstarts = jnp.moveaxis(hstarts, 0, 1)  # (B, NC, H, N, P)
+
+    # inter-chunk output: C_t (dec_t * h_chunkstart)
+    cm = cmat.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    dd = dec.reshape(b, nc, chunk, h)
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", cm, hstarts) * dd[..., None]
+    y = y_intra + y_inter.reshape(b, s, h, p)
+    return y.astype(x.dtype), hf
+
+
+def ssd_decode_step(
+    xt: jax.Array,   # (B, H, P)
+    dtt: jax.Array,  # (B, H)
+    a: jax.Array,    # (H,)
+    bt: jax.Array,   # (B, H, N)
+    ct: jax.Array,   # (B, H, N)
+    hprev: jax.Array,  # (B, H, N, P)
+):
+    """Single-token recurrence (O(1) per step) for decode shapes."""
+    decay = jnp.exp(dtt * a[None, :])[:, :, None, None]
+    hnew = hprev * decay + jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+    yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+    return yt, hnew

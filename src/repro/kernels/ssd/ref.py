@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for SSD: the exact sequential selective-scan recurrence.
+
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T     (N, P) per head
+  y_t = C_t h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, bmat, cmat, h0=None):
+    """x: (B,S,H,P), dt: (B,S,H), a: (H,), bmat/cmat: (B,S,H,N).
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a[None, :])[:, :, None, None]  # (B,H,1,1)
+        upd = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        hnew = hprev * decay + upd
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(bmat, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(cmat, 1, 0).astype(jnp.float32),
+    )
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hf

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk pass (arXiv:2405.21060).
+
+State-space duality splits the selective-scan into (a) a quadratic
+attention-like *intra-chunk* term and (b) a low-rank *inter-chunk*
+recurrence over chunk states. The quadratic term dominates compute and
+maps onto the MXU, so it is the kernel; the inter-chunk scan is O(S/CL)
+and stays in jnp (ops.py).
+
+Per (batch, head, chunk) program, with chunk length CL, state N, head
+dim P:
+
+  a   = dt * A[h]                 (CL,)  log-decay increments
+  L   = exp(segsum(a)) . tril     (CL, CL)  pairwise decay
+  S   = (C B^T) * L               (CL, CL)  "attention" scores
+  y   = S (x * dt)                (CL, P)   intra-chunk output
+  st  = (B * decay_to_end)^T (x dt)  (N, P) chunk state contribution
+  dec = exp(cumsum(a))            (CL,)  decay from chunk start (for the
+                                          inter-chunk term added in ops)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    x_ref,    # (1, CL, 1, P)
+    dt_ref,   # (1, CL, 1)
+    a_ref,    # (1, 1) A value for this head
+    b_ref,    # (1, CL, 1, N)
+    c_ref,    # (1, CL, 1, N)
+    y_ref,    # (1, CL, 1, P) intra-chunk output
+    st_ref,   # (1, 1, 1, N, P) chunk state contribution
+    dec_ref,  # (1, CL, 1) decay-from-chunk-start
+):
+    x = x_ref[0, :, 0].astype(jnp.float32)    # (CL, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (CL,)
+    av = a_ref[0, 0].astype(jnp.float32)      # scalar (negative)
+    bm = b_ref[0, :, 0].astype(jnp.float32)   # (CL, N)
+    cm = c_ref[0, :, 0].astype(jnp.float32)   # (CL, N)
+
+    a = dt * av                                # (CL,) log decays
+    cum = jnp.cumsum(a)                        # inclusive
+    # pairwise decay L[i, j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    cl = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * ldec                                   # (CL, CL)
+    xdt = x * dt[:, None]                      # (CL, P)
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # chunk state: sum_j exp(cum_last - cum_j) B_j (x_j dt_j)^T
+    decay_to_end = jnp.exp(cum[-1] - cum)      # (CL,)
+    bw = bm * decay_to_end[:, None]            # (CL, N)
+    st = jax.lax.dot_general(
+        bw, xdt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (N, P)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, :, 0] = jnp.exp(cum).astype(dec_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (positive step sizes)
+    a: jax.Array,   # (H,)       (negative decay rates)
+    bmat: jax.Array,  # (B, S, H, N)  already expanded to per-head
+    cmat: jax.Array,  # (B, S, H, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    """Returns (y_intra (B,S,H,P), states (B,NC,H,N,P), decay (B,S,H))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if s % chunk:
+        raise ValueError(f"S={s} must divide chunk={chunk}")
+    nc = s // chunk
+    grid = (b, nc, h)
+
+    x_spec = pl.BlockSpec((1, chunk, 1, p), lambda bi, ci, hi: (bi, ci, hi, 0))
+    dt_spec = pl.BlockSpec((1, chunk, 1), lambda bi, ci, hi: (bi, ci, hi))
+    a_spec = pl.BlockSpec((1, 1), lambda bi, ci, hi: (hi, 0))
+    bc_spec = pl.BlockSpec((1, chunk, 1, n), lambda bi, ci, hi: (bi, ci, hi, 0))
+    st_spec = pl.BlockSpec(
+        (1, 1, 1, n, p), lambda bi, ci, hi: (bi, ci, hi, 0, 0)
+    )
+
+    y, st, dec = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
+        out_specs=[x_spec, st_spec, dt_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a.reshape(h, 1), bmat, cmat)
+    return y, st, dec

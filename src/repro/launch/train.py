@@ -1,0 +1,180 @@
+"""End-to-end training driver (LM architectures and the HDP sampler).
+
+Examples (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --hdp ap --scale 0.02 --iters 200
+
+On a real cluster the same driver runs under the production mesh; the
+mesh shape is inferred from the available devices (elastic.remesh).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.lm_data import SyntheticLMStream, batches
+from repro.launch import mesh as MESH
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, init_train_state, make_train_step
+
+
+def train_lm(args):
+    from repro.models import lm as LM
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.batch and args.seq:
+        pass
+    mesh = MESH.make_host_mesh() if args.mesh is None else None
+    rules = MESH.train_rules(mesh)
+
+    stream = SyntheticLMStream(
+        cfg.vocab_size, args.batch, args.seq,
+        prefix_len=cfg.prefix_len, d_model=cfg.d_model,
+    )
+    opt = AdamWConfig(lr=args.lr, warmup=20)
+    step_fn_pure = make_train_step(cfg, opt)
+
+    with mesh:
+        from repro.launch.dryrun import abstract_train_state
+
+        shapes, axes = abstract_train_state(cfg)
+        state_sh = jax.tree.map(
+            lambda _: None, shapes, is_leaf=lambda x: False
+        )
+        psh = MESH.shardings_for_tree(shapes.params, axes, rules, mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.train.trainer import TrainState
+
+        state_sh = TrainState(
+            psh,
+            MESH.shardings_for_tree(shapes.mu, axes, rules, mesh),
+            MESH.shardings_for_tree(shapes.nu, axes, rules, mesh),
+            NamedSharding(mesh, P()),
+        )
+        step_fn = jax.jit(step_fn_pure, donate_argnums=(0,),
+                          in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None))
+
+        trainer = Trainer(
+            cfg, opt, step_fn, checkpoint_dir=args.ckpt,
+            checkpoint_every=args.ckpt_every, step_deadline_s=args.deadline,
+        )
+        state = trainer.restore_or_init(jax.random.key(args.seed))
+        state = jax.device_put(state, state_sh)
+        t0 = time.time()
+        start = int(state.step)
+        data = ({k: jnp.asarray(v) for k, v in b.items()}
+                for b in batches(stream, args.steps, start=start))
+        state, history = trainer.run(state, data, log_every=args.log_every)
+        dt = time.time() - t0
+
+    tokens = args.steps * args.batch * args.seq
+    print(json.dumps({
+        "arch": cfg.name, "steps": args.steps,
+        "final_loss": history[-1]["loss"] if history else None,
+        "first_loss": history[0]["loss"] if history else None,
+        "tokens_per_s": round(tokens / dt, 1),
+        "deadline_breaches": trainer.deadline_breaches,
+        "history": history,
+    }, indent=1))
+    return state, history
+
+
+def train_hdp(args):
+    from repro.core import hdp as H
+    from repro.core.sharded import ShardedHDP
+    from repro.data.corpus import shard_balanced
+    from repro.data.synthetic import paper_corpus
+    from repro.train import checkpoint as CKPT
+
+    rng = np.random.default_rng(args.seed)
+    corpus = paper_corpus(args.hdp, rng, scale=args.scale, max_len=args.max_len)
+    mesh = MESH.make_host_mesh()
+    n_dev = len(jax.devices())
+    corpus = shard_balanced(corpus, n_dev)
+    k_topics = args.topics
+    v_pad = ((corpus.V + mesh.shape["model"] - 1) // mesh.shape["model"]
+             ) * mesh.shape["model"]
+    cfg = H.HDPConfig(K=k_topics, V=v_pad, bucket=args.bucket,
+                      z_impl=args.z_impl, hist_cap=min(corpus.max_len, 256))
+    sh = ShardedHDP(mesh, cfg)
+    tokens = jax.device_put(jnp.asarray(corpus.tokens), sh.corpus_shardings()[0])
+    mask = jax.device_put(jnp.asarray(corpus.mask), sh.corpus_shardings()[1])
+
+    state = None
+    if args.ckpt:
+        step = CKPT.latest_step(args.ckpt)
+        if step is not None:
+            template = jax.eval_shape(
+                lambda: sh.init_state(jax.random.key(args.seed), tokens, mask)
+            )
+            state = CKPT.restore(args.ckpt, step, template,
+                                 sh.state_shardings())
+            print(f"restored HDP state at iteration {step}")
+    if state is None:
+        state = sh.init_state(jax.random.key(args.seed), tokens, mask)
+
+    step_fn = sh.jit_iteration()
+    history = []
+    t0 = time.time()
+    for i in range(args.iters):
+        state = step_fn(state, tokens, mask)
+        if (i + 1) % args.log_every == 0:
+            ll = float(H.log_marginal_likelihood(state, tokens, mask, cfg))
+            history.append({
+                "iter": int(state.it), "log_lik": ll,
+                "active_topics": int(H.active_topics(state)),
+                "flag_tokens": int(H.flag_topic_tokens(state)),
+            })
+            print(history[-1], flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            CKPT.save(args.ckpt, int(state.it), state)
+    dt = time.time() - t0
+    print(json.dumps({
+        "corpus": args.hdp, "tokens": corpus.num_tokens,
+        "iters": args.iters, "sec_per_iter": round(dt / args.iters, 3),
+        "tokens_per_s": round(corpus.num_tokens * args.iters / dt, 1),
+    }))
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--hdp", default=None, help="ap|cgcbib|neurips|pubmed")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--topics", type=int, default=100)
+    ap.add_argument("--bucket", type=int, default=64)
+    ap.add_argument("--z-impl", default="sparse")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--deadline", type=float, default=None)
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    if args.hdp:
+        train_hdp(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""GQA attention with RoPE, KV caching and sliding windows."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import mha
+from repro.models.layers import apply_rope
+from repro.models.module import dense_init, zeros_init
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, hq, dh), dtype),
+        "wk": dense_init(k2, (d, hkv, dh), dtype),
+        "wv": dense_init(k3, (d, hkv, dh), dtype),
+        "wo": dense_init(k4, (hq, dh, d), dtype),
+    }
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((hq, dh), dtype)
+        p["bk"] = zeros_init((hkv, dh), dtype)
+        p["bv"] = zeros_init((hkv, dh), dtype)
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    return p, a
+
+
+def _project_qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+    return q, k, v
+
+
+def attention(p, cfg, x, positions, *, use_kernel=False):
+    """Full-sequence causal attention (training / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # (B, S, H, Dh) -> (B, H, S, Dh)
+    o = mha(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=cfg.window,
+        use_kernel=use_kernel,
+    ).transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def attention_prefill(p, cfg, x, positions, cache_len: int):
+    """Prefill: run full attention AND return the KV cache.
+
+    Returns (out, (k_cache, v_cache)) with caches padded to cache_len.
+    Sliding-window layers keep only the trailing ``window`` positions.
+    """
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = mha(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=cfg.window,
+    ).transpose(0, 2, 1, 3)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    s = x.shape[1]
+    keep = min(cache_len, s)
+    pad = cache_len - keep
+    kc = jnp.pad(k[:, s - keep :], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v[:, s - keep :], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (kc, vc)
+
+
+def attention_decode(p, cfg, x, positions, cache, fill: jax.Array):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); cache: (k, v) of (B, C, Hkv, Dh); fill: tokens already
+    in the cache (static ring-free layout: write at index ``fill``).
+    """
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    kc, vc = cache
+    c = kc.shape[1]
+    idx = jnp.clip(fill, 0, c - 1)
+    kc = jax.lax.dynamic_update_slice(kc, k_new, (0, idx, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new, (0, idx, 0, 0))
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    if hq != hkv:
+        rep = hq // hkv
+        kk = jnp.repeat(kc, rep, axis=2)
+        vv = jnp.repeat(vc, rep, axis=2)
+    else:
+        kk, vv = kc, vc
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum(
+        "bohk,bchk->bhoc", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale  # (B, H, 1, C)
+    pos_c = jnp.arange(c)[None, None, None, :]
+    valid = pos_c <= idx
+    if cfg.window is not None:
+        valid &= pos_c > idx - cfg.window
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhoc,bchk->bohk", w, vv.astype(jnp.float32))
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+    return out, (kc, vc)

@@ -1,0 +1,127 @@
+"""Decoder blocks: dense / moe / ssm (Mamba-2) / hybrid (hymba).
+
+Every block is (init, apply_train, apply_prefill, apply_decode) over a
+homogeneous params dict so the whole stack runs under one lax.scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import init_rmsnorm, rmsnorm
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    n1, na1 = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    p["norm1"], a["norm1"] = n1, na1
+    if cfg.attn_active:
+        p["attn"], a["attn"] = ATT.init_attention(ks[0], cfg, cfg.pdtype)
+    if cfg.ssm_active:
+        p["ssm"], a["ssm"] = SSM.init_ssm(ks[1], cfg, cfg.pdtype)
+    if cfg.block_type == "moe":
+        n2, na2 = init_rmsnorm(cfg.d_model, cfg.pdtype)
+        p["norm2"], a["norm2"] = n2, na2
+        p["moe"], a["moe"] = MOE.init_moe(ks[2], cfg, cfg.pdtype)
+    elif cfg.mlp_type != "none" and cfg.d_ff > 0:
+        n2, na2 = init_rmsnorm(cfg.d_model, cfg.pdtype)
+        p["norm2"], a["norm2"] = n2, na2
+        p["mlp"], a["mlp"] = init_mlp(
+            ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.pdtype
+        )
+    return p, a
+
+
+def _mixer_train(p, cfg, h, positions):
+    if cfg.block_type == "hybrid":
+        att = ATT.attention(p["attn"], cfg, h, positions,
+                            use_kernel=cfg.use_kernels)
+        sso, _ = SSM.ssm_mixer(p["ssm"], cfg, h, chunk=cfg.ssd_chunk)
+        return 0.5 * (att + sso)
+    if cfg.block_type == "ssm":
+        out, _ = SSM.ssm_mixer(p["ssm"], cfg, h, chunk=cfg.ssd_chunk)
+        return out
+    return ATT.attention(p["attn"], cfg, h, positions,
+                         use_kernel=cfg.use_kernels)
+
+
+def _ffn(p, cfg, x):
+    aux = None
+    if cfg.block_type == "moe":
+        y, aux = MOE.moe(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps),
+                         dispatch=cfg.moe_dispatch)
+        x = x + y
+    elif "mlp" in p:
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                    cfg.mlp_type)
+    return x, aux
+
+
+def block_train(p, cfg, x, positions):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + _mixer_train(p, cfg, h, positions)
+    x, aux = _ffn(p, cfg, x)
+    return x, aux
+
+
+# -- caches -------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int):
+    """Per-layer cache pytree (leading layer axis added by the caller)."""
+    c = {}
+    if cfg.attn_active:
+        shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+        c["k"] = jnp.zeros(shape, cfg.cdtype)
+        c["v"] = jnp.zeros(shape, cfg.cdtype)
+    if cfg.ssm_active:
+        conv, h0 = SSM.init_ssm_cache(cfg, batch)
+        c["conv"] = conv
+        c["ssm"] = h0
+    return c
+
+
+def block_prefill(p, cfg, x, positions, cache_len: int):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache = {}
+    parts = []
+    if cfg.attn_active:
+        att, (kc, vc) = ATT.attention_prefill(p["attn"], cfg, h, positions,
+                                              cache_len)
+        cache["k"], cache["v"] = kc, vc
+        parts.append(att)
+    if cfg.ssm_active:
+        sso, (conv, hf) = SSM.ssm_mixer(p["ssm"], cfg, h, chunk=cfg.ssd_chunk)
+        cache["conv"], cache["ssm"] = conv, hf.astype(jnp.float32)
+        parts.append(sso)
+    mix = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+    x = x + mix
+    x, _ = _ffn(p, cfg, x)
+    return x, cache
+
+
+def block_decode(p, cfg, x, positions, cache, fill):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    parts = []
+    if cfg.attn_active:
+        att, (kc, vc) = ATT.attention_decode(
+            p["attn"], cfg, h, positions, (cache["k"], cache["v"]), fill
+        )
+        new_cache["k"], new_cache["v"] = kc, vc
+        parts.append(att)
+    if cfg.ssm_active:
+        sso, (conv, hn) = SSM.ssm_decode(
+            p["ssm"], cfg, h, (cache["conv"], cache["ssm"])
+        )
+        new_cache["conv"], new_cache["ssm"] = conv, hn
+        parts.append(sso)
+    mix = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+    x = x + mix
+    x, _ = _ffn(p, cfg, x)
+    return x, new_cache

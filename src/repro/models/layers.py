@@ -1,0 +1,83 @@
+"""Norms, embeddings, rotary embeddings (incl. partial/2d variants)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import dense_init, ones_init
+
+
+# -- RMSNorm ----------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": ones_init((dim,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- Embedding ----------------------------------------------------------------
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    tbl = dense_init(key, (vocab, dim), dtype, scale=1.0)
+    return {"table": tbl}, {"table": ("vocab", "embed")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied softmax head: (..., D) @ (V, D)^T -> (..., V), f32 accum.
+
+    Operands stay in their native (bf16) dtype with f32 accumulation via
+    preferred_element_type: casting to f32 *before* the einsum makes XLA
+    hoist the convert ahead of the FSDP weight all-gather and ship the
+    embedding table over the wire in f32 — 2x traffic (observed on the
+    nemotron dry-run; EXPERIMENTS.md §Perf Cell 3).
+    """
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+# -- Rotary position embeddings ----------------------------------------------
+
+def rope_frequencies(
+    head_dim: int, theta: float, rotary_fraction: float = 1.0
+) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * rotary_fraction)
+    rot -= rot % 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    )
+
+
+def apply_rope(
+    x: jax.Array,             # (B, S, H, Dh)
+    positions: jax.Array,     # (B, S) int32
+    theta: float = 10000.0,
+    rotary_fraction: float = 1.0,
+) -> jax.Array:
+    """Partial rotary: rotate the first ``rotary_fraction`` of head dims,
+    pass the rest through (ChatGLM-style 2d/partial RoPE; nemotron uses
+    fraction 0.5 as well)."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta, rotary_fraction)
+    rot = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)

@@ -1,0 +1,221 @@
+"""CausalLM: init / train forward / prefill / decode, scan-over-layers.
+
+The layer stack runs under one lax.scan over stacked params (HLO size
+constant in depth — required for the 96-layer dry-run compiles), with
+jax.checkpoint around the block for training (remat policy: save only
+layer-boundary residuals).
+
+The vocabulary loss is computed in sequence chunks (cfg.loss_chunk) so
+(B, S, V) logits are never materialized — with vocab-sharded embeddings
+each chunk's logsumexp reduces over the `model` axis automatically under
+pjit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as BLK
+from repro.models.config import LMConfig
+from repro.models.layers import embed, init_embedding, init_rmsnorm, rmsnorm, unembed
+from repro.models.module import prepend_layers_axis
+
+
+# -- init ---------------------------------------------------------------------
+
+def init_lm(key, cfg: LMConfig):
+    k_e, k_b, k_n = jax.random.split(key, 3)
+    pe, ae = init_embedding(k_e, cfg.vocab_size, cfg.d_model, cfg.pdtype)
+
+    keys = jax.random.split(k_b, cfg.num_layers)
+    _, ab = BLK.init_block(keys[0], cfg)  # axes from a single layer
+    pb = jax.vmap(lambda k: BLK.init_block(k, cfg)[0])(keys)
+    ab = prepend_layers_axis(ab)
+
+    pn, an = init_rmsnorm(cfg.d_model, cfg.pdtype)
+    params = {"embed": pe, "blocks": pb, "final_norm": pn}
+    axes = {"embed": ae, "blocks": ab, "final_norm": an}
+    return params, axes
+
+
+def abstract_axes(cfg: LMConfig):
+    """Axes tree without touching device memory (for sharding rules)."""
+    _, axes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+    return axes
+
+
+# -- forward (training) --------------------------------------------------------
+
+def _inputs_to_h(params, cfg, tokens, embeds):
+    x = embed(params["embed"], tokens).astype(cfg.cdtype)
+    if cfg.prefix_len and embeds is not None:
+        x = jnp.concatenate([embeds.astype(cfg.cdtype), x], axis=1)
+    return x
+
+
+def forward_hidden(params, cfg: LMConfig, tokens, embeds=None):
+    """Returns final hidden states (B, S_total, D)."""
+    x = _inputs_to_h(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_params):
+        def blk(p_, x_):
+            y_, _ = BLK.block_train(p_, cfg, x_, positions)
+            if cfg.act_spec is not None:
+                # sequence-parallel residual stream (Megatron-SP): the
+                # scan carry — the only tensor remat keeps — is sharded
+                # over the model axis along sequence.
+                y_ = jax.lax.with_sharding_constraint(
+                    y_, jax.sharding.PartitionSpec(*cfg.act_spec)
+                )
+            return y_, None
+
+        if cfg.remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        y, _ = blk(layer_params, carry)
+        return y, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, _ = body(x, layer)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _largest_divisor_leq(s: int, target: int) -> int:
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+@jax.custom_vjp
+def _grad_dtype_barrier(x):
+    """Identity whose COTANGENT is cast back to x's dtype.
+
+    The f32 logits/loss produce f32 cotangents; without this barrier the
+    whole backward chain runs f32, and XLA converts (bf16) weights to
+    f32 BEFORE their FSDP all-gathers — doubling backward weight traffic
+    (observed on the nemotron dry-run, EXPERIMENTS.md §Perf Cell 3).
+    Moments stay f32 in AdamW; this only narrows the wire/backward dtype.
+    """
+    return x
+
+
+def _gdb_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)  # dtype-carrying residual
+
+
+def _gdb_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+_grad_dtype_barrier.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def lm_loss(params, cfg: LMConfig, tokens, targets, mask, embeds=None):
+    """Chunked softmax cross-entropy. tokens/targets/mask: (B, S_tok)."""
+    h = forward_hidden(params, cfg, tokens, embeds)
+    h = _grad_dtype_barrier(h)  # keep the backward chain in cfg dtype
+    h = h[:, cfg.prefix_len :]  # loss on token positions only
+    b, s, d = h.shape
+    chunk = _largest_divisor_leq(s, cfg.loss_chunk)
+    nchunk = s // chunk
+
+    def chunk_loss(args):
+        hc, tc, mc = args
+        logits = unembed(params["embed"], hc)  # (B, c, V) f32
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * mc), jnp.sum(mc)
+
+    hs = h.reshape(b, nchunk, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nchunk, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nchunk, chunk).swapaxes(0, 1).astype(jnp.float32)
+    losses, counts = jax.lax.map(jax.checkpoint(chunk_loss), (hs, ts, ms))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+# -- serving -------------------------------------------------------------------
+
+def prefill(params, cfg: LMConfig, tokens, cache_len: int, embeds=None):
+    """Returns (last-position logits (B, V), cache pytree with leading L)."""
+    x = _inputs_to_h(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_params):
+        y, cache = BLK.block_prefill(layer_params, cfg, carry, positions,
+                                     cache_len)
+        return y, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["blocks"])
+    else:
+        caches = []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, c = body(x, layer)
+            caches.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: LMConfig, token, cache, fill):
+    """One decode step. token: (B,) int32; fill: scalar int32 (cache fill).
+
+    Returns (logits (B, V), new cache)."""
+    x = embed(params["embed"], token[:, None]).astype(cfg.cdtype)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(fill[None, None], (b, 1)).astype(jnp.int32)
+
+    def body(carry, scanned):
+        layer_params, cache_l = scanned
+        y, nc = BLK.block_decode(layer_params, cfg, carry, positions,
+                                 cache_l, fill)
+        return y, nc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["blocks"])
+            cl = jax.tree.map(lambda a: a[i], cache)
+            x, nc = body(x, (layer, cl))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], h)[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: LMConfig, batch: int, cache_len: int):
+    """Full-stack cache with leading layer axis."""
+    one = BLK.init_cache(cfg, batch, cache_len)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one
+    )
+
+
+def cache_axes(cfg: LMConfig):
+    """Logical axes for the cache pytree (for sharding rules)."""
+    ax = {}
+    if cfg.attn_active:
+        ax["k"] = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        ax["v"] = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    if cfg.ssm_active:
+        ax["conv"] = ("layers", "batch", None, "ssm_inner")
+        ax["ssm"] = ("layers", "batch", "ssm_heads", None, None)
+    return ax

@@ -1,0 +1,37 @@
+"""MLP variants: swiglu / geglu / gelu / squared-relu (nemotron)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import dense_init
+
+GATED = {"swiglu", "geglu"}
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    width = 2 * d_ff if mlp_type in GATED else d_ff
+    p = {
+        "wi": dense_init(k1, (d_model, width), dtype),
+        "wo": dense_init(k2, (d_ff, d_model), dtype),
+    }
+    a = {"wi": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    return p, a
+
+
+def mlp(p, x, mlp_type: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if mlp_type in GATED:
+        g, u = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(g) if mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    elif mlp_type == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type!r}")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

@@ -1,0 +1,56 @@
+"""Minimal functional parameter system (no flax offline).
+
+Params are nested dicts of arrays. Every init function returns
+``(params, axes)`` — two parallel pytrees, where ``axes`` holds a tuple
+of *logical axis names* per array (e.g. ("embed", "heads")). The launch
+layer turns logical axes into NamedShardings through the rules table in
+launch/mesh.py, skipping axes that do not divide the mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+Axes = dict[str, Any]
+
+
+def dense_init(
+    key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, scale: float | None = None
+) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        scale = 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def stack_layer_params(init_fn, key: jax.Array, num_layers: int):
+    """vmap a per-layer init over layer keys -> stacked params with a
+    leading ``layers`` axis (consumed by lax.scan over the block stack)."""
+    keys = jax.random.split(key, num_layers)
+    params = jax.vmap(init_fn)(keys)
+    return params
+
+
+def prepend_layers_axis(axes: Axes) -> Axes:
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a), axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

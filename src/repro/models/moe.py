@@ -1,0 +1,135 @@
+"""Fine-grained mixture-of-experts with shared experts.
+
+Two dispatch implementations (selectable; both static-shape):
+
+  * ``scatter`` (default) — position-in-expert via cumsum, then
+    scatter-add into (E, C, D) expert buffers and gather back. Peak
+    transient memory O(T*K*D), no (T, E, C) one-hot tensor. This is the
+    memory-lean path used by the dry-run.
+  * ``dense`` — GShard/Switch-style one-hot einsum dispatch; MXU-friendly
+    but materializes the (T, E, C) mask unless XLA fuses it. Kept for the
+    §Perf comparison on the MoE cells.
+
+Tokens over capacity C = ceil(T*K/E * capacity_factor) are dropped
+(standard TPU practice; combine weight zero). Shared experts are a dense
+MLP of width shared_experts * d_ff applied to every token (DeepSeek-MoE,
+arXiv:2401.06066).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import GATED, init_mlp, mlp
+from repro.models.module import dense_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    width = 2 * f if cfg.mlp_type in GATED else f
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d, e), jnp.float32),  # router kept f32
+        "wi": dense_init(k2, (e, d, width), dtype),
+        "wo": dense_init(k3, (e, f, d), dtype),
+    }
+    a = {
+        "router": ("embed", "experts"),
+        "wi": ("experts", "embed", "ffn"),
+        "wo": ("experts", "ffn", "embed"),
+    }
+    if cfg.shared_experts:
+        sp, sa = init_mlp(
+            k4, d, cfg.shared_experts * f, cfg.mlp_type, dtype
+        )
+        p["shared"] = sp
+        a["shared"] = sa
+    return p, a
+
+
+def _routing(p, cfg, xf):
+    """xf: (T, D) f32. Returns (idx (T,K), gates (T,K))."""
+    logits = xf @ p["router"]
+    if cfg.router_type == "sigmoid":  # llama4-style
+        scores = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(scores, cfg.top_k)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(scores, cfg.top_k)
+        gates = gates / jnp.maximum(
+            gates.sum(axis=-1, keepdims=True), 1e-9
+        )  # DeepSeek top-k renormalization
+    return idx.astype(jnp.int32), gates.astype(jnp.float32)
+
+
+def _expert_ffn(p, cfg, expert_in):
+    """expert_in: (E, C, D) -> (E, C, D)."""
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(expert_in.dtype))
+    if cfg.mlp_type in GATED:
+        g, u = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    elif cfg.mlp_type == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(expert_in.dtype))
+
+
+def moe(p, cfg, x, *, dispatch: str = "scatter"):
+    """x: (B, S, D). Returns (out, aux) where aux has load-balance stats."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.num_experts
+    cap = int(
+        math.ceil(t * k / e * cfg.capacity_factor)
+    )
+    cap = max(cap, 1)
+
+    xt = x.reshape(t, d)
+    idx, gates = _routing(p, cfg, xt.astype(jnp.float32))
+
+    # position of each (token, slot) within its expert, in arrival order
+    flat_e = idx.reshape(t * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    gates_flat = gates.reshape(t * k) * keep.astype(jnp.float32)
+
+    if dispatch == "scatter":
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        src = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+        pos_c = jnp.where(keep, pos_in_e, cap - 1)
+        buf = buf.at[flat_e, pos_c].add(
+            jnp.where(keep[:, None], src, 0).astype(x.dtype)
+        )
+        out_buf = _expert_ffn(p, cfg, buf)  # (E, C, D)
+        y = out_buf[flat_e, pos_c] * gates_flat[:, None]
+        y = y.reshape(t, k, d).sum(axis=1)
+    elif dispatch == "dense":
+        assign = jax.nn.one_hot(flat_e, e, dtype=x.dtype)  # (TK, E)
+        poh = jax.nn.one_hot(pos_in_e, cap, dtype=x.dtype) * keep[
+            :, None
+        ].astype(x.dtype)  # (TK, C)
+        src = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+        buf = jnp.einsum("te,tc,td->ecd", assign, poh, src)
+        out_buf = _expert_ffn(p, cfg, buf)
+        y = jnp.einsum("t,te,tc,ecd->td", gates_flat, assign, poh, out_buf)
+        y = y.reshape(t, k, d).sum(axis=1)
+    else:
+        raise ValueError(dispatch)
+
+    out = y.reshape(b, s, d).astype(x.dtype)
+    if "shared" in p:
+        out = out + mlp(p["shared"], x, cfg.mlp_type)
+
+    # load-balance diagnostics (Switch aux loss form)
+    me = jnp.mean(onehot.astype(jnp.float32), axis=0)
+    aux = {"expert_load": me, "dropped": 1.0 - jnp.mean(keep)}
+    return out, aux

@@ -1,0 +1,126 @@
+"""Sharded checkpointing with atomic commit and reshard-on-restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — flat key -> {shape, dtype}
+            <key>.npy       — full logical array (gathered)
+
+Restore accepts ANY target sharding/mesh — arrays are saved at logical
+(global) shape, so an elastic restart on a different device count simply
+device_puts them under the new shardings. Writes go to ``.tmp-step_<N>``
+and are renamed only when complete (atomic commit: a crash mid-write
+never corrupts the latest checkpoint). A retention policy keeps the most
+recent ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state, *, keep: int = 3) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = os.path.join(ckpt_dir, f".tmp-step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    manifest = {}
+    for key, leaf in flat.items():
+        if hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+            leaf.dtype, jax.dtypes.prng_key
+        ):
+            leaf = jax.random.key_data(leaf)
+            np.save(os.path.join(tmp, key.replace("/", "__") + ".npy"),
+                    np.asarray(jax.device_get(leaf)))
+            manifest[key] = {"shape": list(leaf.shape), "dtype": "key_data"}
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jax.numpy.bfloat16:
+            np.save(os.path.join(tmp, key.replace("/", "__") + ".npy"),
+                    arr.view(np.uint16))
+            manifest[key] = {"shape": list(arr.shape), "dtype": "bfloat16"}
+        else:
+            np.save(os.path.join(tmp, key.replace("/", "__") + ".npy"), arr)
+            manifest[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "arrays": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def _apply_retention(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template, shardings=None):
+    """Rebuild ``template``-structured state; reshard onto ``shardings``
+    (same treedef) if given — this is the elastic-restart entry point."""
+    import jax.numpy as jnp
+
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["arrays"]
+    flat_keys = list(_flatten(template).keys())
+    leaves_tpl, treedef = jax.tree_util.tree_flatten(template)
+    sh_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(leaves_tpl)
+    )
+    leaves = []
+    for key, tpl, sh in zip(flat_keys, leaves_tpl, sh_leaves):
+        meta = manifest[key]
+        raw = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
+        if meta["dtype"] == "bfloat16":
+            arr = jnp.asarray(raw.view(jnp.bfloat16))
+        elif meta["dtype"].startswith("key"):
+            arr = raw
+        else:
+            arr = raw
+        if hasattr(tpl, "dtype") and str(tpl.dtype).startswith("key"):
+            # typed PRNG keys round-trip through key_data
+            arr = jax.random.wrap_key_data(jnp.asarray(raw))
+        val = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+        leaves.append(val)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,101 @@
+"""Gradient compression for cross-pod reduction: int8 quantized psum with
+error feedback.
+
+Cross-pod links are the scarcest bandwidth at 1000+ node scale; an int8
+all-reduce cuts wire bytes 4x vs f32 at a quantization error that error
+feedback (residual carried between steps) keeps unbiased over time
+(1-bit Adam / EF-SGD literature).
+
+``compressed_psum(x, axis, resid)`` runs inside shard_map: agree on a
+shared scale (psum-max), quantize, integer-psum, dequantize; the
+quantization residual is returned for feedback. ``make_pod_sync`` wraps a
+whole gradient pytree with a partial-auto shard_map over only the `pod`
+axis so it composes with a pjit-sharded train step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array):
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def compressed_psum(x: jax.Array, axis: str, resid: jax.Array):
+    """int8 all-reduce with error feedback. Returns (mean, new_resid)."""
+    n = jax.lax.axis_size(axis)
+    xf = x.astype(jnp.float32) + resid
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = quantize_int8(xf, scale)
+    deq = q.astype(jnp.float32) * scale
+    new_resid = xf - deq
+    # int16 wire format: 2x fewer bytes than f32, overflow-safe for up to
+    # 256 pods (127 * 256 < 2^15). True s8-wire would need hierarchical
+    # accumulation; s16 keeps one psum and still halves cross-pod traffic.
+    total = jax.lax.psum(q.astype(jnp.int16), axis)
+    return (total.astype(jnp.float32) * scale / n).astype(x.dtype), new_resid
+
+
+def tree_compressed_psum(grads, resid, *, pod_axis: str = "pod",
+                         compress: bool = True):
+    """Apply compressed_psum leaf-wise. Must run inside a shard_map
+    region where ``pod_axis`` is manual."""
+
+    def one(g, r):
+        if compress:
+            return compressed_psum(g, pod_axis, r)
+        m = (
+            jax.lax.psum(g.astype(jnp.float32), pod_axis)
+            / jax.lax.axis_size(pod_axis)
+        ).astype(g.dtype)
+        return m, r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(resid)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        tdef.unflatten([o[1] for o in out]),
+    )
+
+
+def make_compressed_grads(loss_fn, mesh, *, compress: bool = True,
+                          pod_axis: str = "pod"):
+    """(params, batch, resid) -> (loss, grads, resid) with the cross-pod
+    gradient reduction done as an explicit int8 psum.
+
+    Partial-manual shard_map: only `pod` is manual — `data`/`model` stay
+    under the automatic SPMD partitioner, so this composes with the
+    pjit-sharded parameters. The batch must be sharded over `pod` on its
+    leading axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def per_pod(params, batch, resid):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, resid = tree_compressed_psum(
+            grads, resid, pod_axis=pod_axis, compress=compress
+        )
+        loss = jax.lax.pmean(loss, pod_axis)
+        return loss, grads, resid
+
+    batch_spec = P(pod_axis)
+    return jax.shard_map(
+        per_pod, mesh=mesh,
+        in_specs=(P(), batch_spec, P()),
+        out_specs=(P(), P(), P()),
+        axis_names=frozenset({pod_axis}),
+        check_vma=False,
+    )
+
+
+def init_residuals(grads_shape_tree):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape_tree
+    )

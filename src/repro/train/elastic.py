@@ -1,0 +1,93 @@
+"""Elastic scaling + straggler mitigation utilities.
+
+On node loss the runtime rebuilds a mesh from the surviving devices,
+restores the last checkpoint (arrays are stored at logical shape, see
+checkpoint.py) and re-partitions the data deterministically. These
+helpers implement the re-shard mechanics and the monitoring policy; the
+orchestration (detecting dead hosts) is the cluster scheduler's job.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def largest_mesh(num_devices: int, axes=("data", "model"),
+                 model_parallel: int = 1) -> tuple[int, ...]:
+    """Biggest usable (data, model) grid from a (possibly reduced)
+    device count — drops stragglers to the largest power-of-two grid."""
+    model = model_parallel
+    data = num_devices // model
+    data = 2 ** int(math.log2(data)) if data > 0 else 0
+    if data == 0:
+        raise ValueError("not enough devices for the model-parallel degree")
+    return (data, model)
+
+
+def remesh(devices=None, *, axes=("data", "model"), model_parallel: int = 1
+           ) -> Mesh:
+    """Build the largest mesh from surviving devices (elastic restart)."""
+    devices = list(devices if devices is not None else jax.devices())
+    shape = largest_mesh(len(devices), axes, model_parallel)
+    n = int(np.prod(shape))
+    arr = np.array(devices[:n]).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def reshard_state(state, shardings):
+    """device_put a restored/old state onto new-mesh shardings."""
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+class StragglerMonitor:
+    """Per-step wall-time tracker with outlier detection.
+
+    A step slower than ``threshold`` x the trailing median is flagged;
+    ``breaches_before_action`` consecutive flags trigger the registered
+    action (e.g. checkpoint + re-shard without the slow host).
+    """
+
+    def __init__(self, *, window: int = 32, threshold: float = 2.0,
+                 breaches_before_action: int = 3,
+                 action: Optional[Callable[[], None]] = None):
+        self.window = window
+        self.threshold = threshold
+        self.breaches_before_action = breaches_before_action
+        self.action = action
+        self.times: list[float] = []
+        self.consecutive = 0
+        self.total_breaches = 0
+        self.actions_fired = 0
+
+    def record(self, seconds: float) -> bool:
+        """Returns True if this step was flagged as straggling."""
+        flagged = False
+        if len(self.times) >= 8:
+            med = statistics.median(self.times[-self.window:])
+            if seconds > self.threshold * med:
+                flagged = True
+                self.consecutive += 1
+                self.total_breaches += 1
+                if (self.consecutive >= self.breaches_before_action
+                        and self.action is not None):
+                    self.action()
+                    self.actions_fired += 1
+                    self.consecutive = 0
+            else:
+                self.consecutive = 0
+        self.times.append(seconds)
+        return flagged
+
+    def timed(self, fn, *args, **kwargs):
+        t0 = time.monotonic()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        self.record(time.monotonic() - t0)
+        return out

@@ -1,0 +1,69 @@
+"""AdamW with global-norm clipping, built from raw JAX (no optax offline).
+
+Moments are f32 regardless of param dtype (bf16 params + f32 m/v — the
+standard large-model recipe when a separate master copy is not kept).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32) + 1.0  # step 0 trains too
+    warm = jnp.minimum(s / max(cfg.warmup, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, grads, mu, nu, params, step):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v = cfg.b2 * v + (1.0 - cfg.b2) * gf * gf
+        mh = m / c1
+        vh = v / c2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return m, v, (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(mu)
+    flat_v = tdef.flatten_up_to(nu)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = tdef.unflatten([o[0] for o in out])
+    nu = tdef.unflatten([o[1] for o in out])
+    params = tdef.unflatten([o[2] for o in out])
+    return mu, nu, params, gnorm

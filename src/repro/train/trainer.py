@@ -1,0 +1,119 @@
+"""Training step + loop with fault-tolerant wrappers.
+
+``make_train_step(cfg, opt)`` builds the pure (state, batch) -> (state,
+metrics) function that the launcher jits with shardings — the same
+function the multi-pod dry-run lowers.
+
+The loop (``Trainer``) adds: periodic checkpointing, straggler deadline
+monitoring, NaN-loss skip protection (gradient-skip on non-finite loss),
+and restart-from-checkpoint — the fault-tolerance substrate for
+large-scale runs (DESIGN.md section 5).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.models.config import LMConfig
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def init_train_state(key, cfg: LMConfig) -> TrainState:
+    params, _ = LM.init_lm(key, cfg)
+    mu, nu = adamw_init(params)
+    return TrainState(params, mu, nu, jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: LMConfig, opt: AdamWConfig):
+    def train_step(state: TrainState, batch: dict):
+        def loss_fn(params):
+            return LM.lm_loss(
+                params, cfg, batch["tokens"], batch["targets"],
+                batch["mask"], batch.get("embeds"),
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        # NaN protection: skip the update (keep moments) on non-finite
+        # loss OR gradients — one bad batch / flaky host must not poison
+        # the run. (Gradients can be NaN while the loss is finite.)
+        from repro.train.optimizer import global_norm
+
+        ok = jnp.isfinite(loss) & jnp.isfinite(global_norm(grads))
+        grads = jax.tree.map(
+            lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads
+        )
+        mu, nu, params, gnorm = adamw_update(
+            opt, grads, state.mu, state.nu, state.params, state.step
+        )
+        params = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), params, state.params
+        )
+        new_state = TrainState(params, mu, nu, state.step + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "skipped": (~ok).astype(jnp.int32)}
+        return new_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Fault-tolerant training loop (single- or multi-device)."""
+
+    def __init__(
+        self, cfg: LMConfig, opt: AdamWConfig, step_fn, *,
+        checkpoint_dir: Optional[str] = None, checkpoint_every: int = 100,
+        step_deadline_s: Optional[float] = None,
+    ):
+        self.cfg = cfg
+        self.opt = opt
+        self.step_fn = step_fn
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.step_deadline_s = step_deadline_s
+        self.deadline_breaches = 0
+
+    def restore_or_init(self, key) -> TrainState:
+        if self.checkpoint_dir:
+            from repro.train.checkpoint import latest_step, restore
+
+            step = latest_step(self.checkpoint_dir)
+            if step is not None:
+                template = jax.eval_shape(
+                    lambda: init_train_state(key, self.cfg)
+                )
+                return restore(self.checkpoint_dir, step, template)
+        return init_train_state(key, self.cfg)
+
+    def run(self, state: TrainState, batches, *, log_every: int = 10):
+        from repro.train.checkpoint import save
+
+        history = []
+        for i, batch in enumerate(batches):
+            t0 = time.monotonic()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            if self.step_deadline_s and dt > self.step_deadline_s:
+                # Straggler mitigation hook: log, count, and (in a real
+                # multi-host deployment) trigger re-shard on repeat.
+                self.deadline_breaches += 1
+            if i % log_every == 0:
+                history.append(
+                    {"step": int(state.step), "loss": float(metrics["loss"]),
+                     "grad_norm": float(metrics["grad_norm"]), "sec": dt}
+                )
+            if self.checkpoint_dir and int(state.step) % self.checkpoint_every == 0:
+                save(self.checkpoint_dir, int(state.step), state)
+        return state, history

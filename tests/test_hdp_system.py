@@ -1,0 +1,136 @@
+"""End-to-end HDP sampler behaviour (paper Section 3 phenomenology)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdp as H
+from repro.core.ref import RefHDP
+from repro.data.synthetic import planted_topics_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    return planted_topics_corpus(rng, D=60, V=64, K_true=4, doc_len=(15, 30))
+
+
+def run_chain(corpus, impl, iters, k=24, seed=0, evals=3):
+    cfg = H.HDPConfig(K=k, V=corpus.V, bucket=32, z_impl=impl, hist_cap=32)
+    tokens = jnp.asarray(corpus.tokens)
+    mask = jnp.asarray(corpus.mask)
+    state = H.init_state(jax.random.key(seed), tokens, mask, cfg)
+    step = jax.jit(lambda s: H.gibbs_iteration(s, tokens, mask, cfg))
+    lls = [float(H.posterior_predictive_ll(state, tokens, mask, cfg))]
+    for block in range(evals):
+        for i in range(iters // evals):
+            state = step(state)
+        lls.append(float(H.posterior_predictive_ll(state, tokens, mask, cfg)))
+    return state, lls, cfg, tokens, mask
+
+
+@pytest.mark.parametrize("impl", ["dense", "sparse", "pallas"])
+def test_loglik_improves_and_stats_consistent(corpus, impl):
+    c, _ = corpus
+    state, lls, cfg, tokens, mask = run_chain(c, impl, iters=45)
+    # posterior-predictive LL is stable: must clearly improve from the
+    # single-topic init.
+    assert np.mean(lls[-2:]) > lls[0], f"{impl}: {lls}"
+    # sufficient statistics consistent with z
+    n_re = H.count_n(state.z, tokens, mask, cfg.K, cfg.V)
+    np.testing.assert_array_equal(np.asarray(n_re), np.asarray(state.n))
+    # token conservation
+    assert int(np.asarray(state.n).sum()) == c.num_tokens
+    # psi on the simplex
+    assert abs(float(state.psi.sum()) - 1.0) < 1e-4
+    # flag-topic occupancy: the paper's adequacy check. K*=24 is kept
+    # deliberately small here, so allow a trace amount (paper: track it
+    # and raise K* when nonzero; see test_flag_topic_empty_at_large_K).
+    assert int(H.flag_topic_tokens(state)) <= max(2, c.num_tokens // 500)
+
+
+def test_flag_topic_empty_at_large_K(corpus):
+    """With generous truncation the flag topic stays empty (Section 3)."""
+    c, _ = corpus
+    state, _, cfg, tokens, mask = run_chain(c, "sparse", iters=30, k=64)
+    assert int(H.flag_topic_tokens(state)) == 0
+
+
+def test_topic_growth_from_single_init(corpus):
+    """Paper init: 1 topic; the sampler must create topics."""
+    c, _ = corpus
+    state, _, cfg, *_ = run_chain(c, "sparse", iters=30)
+    assert int(H.active_topics(state)) > 1
+
+
+def test_dense_and_sparse_same_law(corpus):
+    """Both exact z-steps target the same conditional: active-topic and
+    log-lik trajectories must agree within Monte-Carlo error across seeds."""
+    c, _ = corpus
+    stats = {impl: [] for impl in ("dense", "sparse")}
+    for impl in stats:
+        for seed in range(3):
+            state, lls, *_ = run_chain(c, impl, iters=15, seed=seed)
+            stats[impl].append(
+                (int(H.active_topics(state)), lls[-1])
+            )
+    act_d = np.mean([s[0] for s in stats["dense"]])
+    act_s = np.mean([s[0] for s in stats["sparse"]])
+    ll_d = np.mean([s[1] for s in stats["dense"]])
+    ll_s = np.mean([s[1] for s in stats["sparse"]])
+    assert abs(act_d - act_s) <= 6
+    assert abs(ll_d - ll_s) / abs(ll_d) < 0.05
+
+
+def test_matches_reference_sampler_trajectory(corpus):
+    """JAX sampler and the pure-numpy reference reach comparable states
+    (same complete-data LL metric on both)."""
+    c, _ = corpus
+    state, _, cfg, tokens, mask = run_chain(c, "sparse", iters=21)
+    ours = float(H.log_marginal_likelihood(state, tokens, mask, cfg))
+    docs = [c.tokens[i][c.mask[i]] for i in range(c.num_docs)]
+    ref = RefHDP(docs, V=c.V, K=cfg.K, alpha=cfg.alpha, beta=cfg.beta,
+                 gamma=cfg.gamma, seed=0)
+    for _ in range(21):
+        ref.iteration()
+    ll_ref = ref.log_marginal_likelihood()
+    rel = abs(ours - ll_ref) / abs(ll_ref)
+    assert rel < 0.08, (ours, ll_ref)
+
+
+def test_exact_phi_variant(corpus):
+    """Algorithm 1 (exact Dirichlet Phi) also improves log-lik."""
+    c, _ = corpus
+    cfg = H.HDPConfig(K=16, V=c.V, bucket=32, z_impl="dense", exact_phi=True,
+                      hist_cap=32)
+    tokens, mask = jnp.asarray(c.tokens), jnp.asarray(c.mask)
+    state = H.init_state(jax.random.key(0), tokens, mask, cfg)
+    step = jax.jit(lambda s: H.gibbs_iteration(s, tokens, mask, cfg))
+    ll0 = float(H.posterior_predictive_ll(state, tokens, mask, cfg))
+    for _ in range(20):
+        state = step(state)
+    ll1 = float(H.posterior_predictive_ll(state, tokens, mask, cfg))
+    assert ll1 > ll0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_invariants_any_seed(seed):
+    """Invariants hold for arbitrary seeds: counts conserved, z in range,
+    histogram total == sum of per-doc active topics."""
+    rng = np.random.default_rng(seed % (2**31))
+    d, l, v, k = 8, 12, 20, 10
+    tokens = jnp.asarray(rng.integers(0, v, (d, l)).astype(np.int32))
+    mask = jnp.asarray(rng.random((d, l)) > 0.3)
+    cfg = H.HDPConfig(K=k, V=v, bucket=16, z_impl="sparse", hist_cap=16)
+    state = H.init_state(jax.random.key(seed % 2**31), tokens, mask, cfg)
+    state = H.gibbs_iteration(state, tokens, mask, cfg)
+    z = np.asarray(state.z)
+    msk = np.asarray(mask)
+    assert ((z >= 0) & (z < k))[msk].all()
+    assert int(np.asarray(state.n).sum()) == int(msk.sum())
+    m = H.doc_topic_counts(state.z, mask, k)
+    dh = H.d_histogram(m, 16)
+    assert int(np.asarray(dh).sum()) == int((np.asarray(m) > 0).sum())

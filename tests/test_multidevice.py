@@ -1,0 +1,211 @@
+"""Multi-device integration tests.
+
+Run in subprocesses with --xla_force_host_platform_device_count=8 so the
+rest of the suite keeps the real (single-device) backend, per the
+project rule that only dryrun.py may set device-count flags globally.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, timeout=500):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert p.returncode == 0, p.stdout + "\n" + p.stderr
+    return p.stdout
+
+
+def test_sharded_hdp_all_impls_and_meshes():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.core import hdp
+        from repro.core.sharded import ShardedHDP
+        from repro.data.synthetic import planted_topics_corpus
+        from repro.data.corpus import shard_balanced
+
+        rng = np.random.default_rng(0)
+        corpus, _ = planted_topics_corpus(rng, D=60, V=64, K_true=4,
+                                          doc_len=(15, 30))
+        corpus = shard_balanced(corpus, 8)
+        meshes = [
+            jax.make_mesh((4, 2), ("data", "model"),
+                          axis_types=(AxisType.Auto,) * 2),
+            jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                          axis_types=(AxisType.Auto,) * 3),
+        ]
+        for mesh in meshes:
+            for impl in ("sparse", "pallas", "dense"):
+                cfg = hdp.HDPConfig(K=16, V=64, bucket=16, z_impl=impl,
+                                    hist_cap=32)
+                sh = ShardedHDP(mesh, cfg)
+                ts, ms = sh.corpus_shardings()
+                tokens = jax.device_put(jnp.asarray(corpus.tokens), ts)
+                mask = jax.device_put(jnp.asarray(corpus.mask), ms)
+                state = sh.init_state(jax.random.key(0), tokens, mask)
+                step = sh.jit_iteration()
+                ll0 = float(hdp.log_marginal_likelihood(state, tokens, mask, cfg))
+                for _ in range(8):
+                    state = step(state, tokens, mask)
+                ll1 = float(hdp.log_marginal_likelihood(state, tokens, mask, cfg))
+                n_re = hdp.count_n(state.z, tokens, mask, cfg.K, cfg.V)
+                assert (np.asarray(n_re) == np.asarray(state.n)).all(), impl
+                assert int(np.asarray(state.n).sum()) == corpus.num_tokens
+                assert ll1 > ll0, (impl, ll0, ll1)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_lm_train_matches_single_device():
+    """pjit-sharded train step == single-device step (same math)."""
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.models.config import LMConfig
+        from repro.launch import mesh as MESH
+        from repro.launch.dryrun import abstract_train_state
+        from repro.train.trainer import TrainState, init_train_state, make_train_step
+        from repro.train.optimizer import AdamWConfig
+        from repro.data.lm_data import SyntheticLMStream
+
+        cfg = LMConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=64, loss_chunk=16)
+        stream = SyntheticLMStream(cfg.vocab_size, 8, 32, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+        opt = AdamWConfig(lr=1e-3)
+        state0 = init_train_state(jax.random.key(0), cfg)
+        s_single, m_single = jax.jit(make_train_step(cfg, opt))(state0, batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rules = MESH.train_rules(mesh)
+        shapes, axes = abstract_train_state(cfg)
+        with mesh:
+            ssh = TrainState(
+                MESH.shardings_for_tree(shapes.params, axes, rules, mesh),
+                MESH.shardings_for_tree(shapes.mu, axes, rules, mesh),
+                MESH.shardings_for_tree(shapes.nu, axes, rules, mesh),
+                NamedSharding(mesh, P()))
+            state_sh = jax.device_put(state0, ssh)
+            step = jax.jit(make_train_step(cfg, opt),
+                           in_shardings=(ssh, None), out_shardings=(ssh, None))
+            s_shard, m_shard = step(state_sh, batch)
+        assert abs(float(m_single['loss']) - float(m_shard['loss'])) < 1e-4
+        for a, b in zip(jax.tree.leaves(s_single.params),
+                        jax.tree.leaves(s_shard.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=2e-5, rtol=1e-4)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_cross_pod_gradients():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.train.compression import make_compressed_grads, init_residuals
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)}
+        def loss_fn(p, b):
+            return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+        batch = {"x": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+                 "y": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+        resid = init_residuals(jax.eval_shape(lambda: params))
+        with mesh:
+            fc = jax.jit(make_compressed_grads(loss_fn, mesh, compress=True))
+            fx = jax.jit(make_compressed_grads(loss_fn, mesh, compress=False))
+            lc, gc, rc = fc(params, batch, resid)
+            lx, gx, _ = fx(params, batch, resid)
+            rel = float(jnp.abs(gc["w"] - gx["w"]).max() /
+                        jnp.abs(gx["w"]).max())
+            assert rel < 0.02, rel
+            # error feedback: residual is exactly the quantization error
+            assert float(jnp.abs(rc["w"]).max()) > 0
+            # wire dtype: int16 all-reduce present
+            txt = fc.lower(params, batch, resid).compile().as_text()
+            assert any("s16" in l for l in txt.splitlines()
+                       if "all-reduce" in l), "no int16 wire all-reduce"
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_elastic_restart_reshard():
+    """Checkpoint on one mesh, restore onto a smaller one (node loss)."""
+    out = run_py("""
+        import tempfile, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.models.config import LMConfig
+        from repro.launch import mesh as MESH
+        from repro.launch.dryrun import abstract_train_state
+        from repro.train import checkpoint as CKPT
+        from repro.train.trainer import TrainState, init_train_state
+        from repro.train.elastic import remesh
+
+        cfg = LMConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=64)
+        state = init_train_state(jax.random.key(0), cfg)
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        shapes, axes = abstract_train_state(cfg)
+        rules = MESH.train_rules(mesh8)
+        ssh8 = TrainState(
+            MESH.shardings_for_tree(shapes.params, axes, rules, mesh8),
+            MESH.shardings_for_tree(shapes.mu, axes, rules, mesh8),
+            MESH.shardings_for_tree(shapes.nu, axes, rules, mesh8),
+            NamedSharding(mesh8, P()))
+        state8 = jax.device_put(state, ssh8)
+        with tempfile.TemporaryDirectory() as d:
+            CKPT.save(d, 3, state8)
+            # "lose" 2 devices -> largest mesh from 6 with model=2 is (2,2)
+            mesh4 = remesh(jax.devices()[:6], model_parallel=2)
+            assert dict(mesh4.shape) == {"data": 2, "model": 2}
+            rules4 = MESH.train_rules(mesh4)
+            ssh4 = TrainState(
+                MESH.shardings_for_tree(shapes.params, axes, rules4, mesh4),
+                MESH.shardings_for_tree(shapes.mu, axes, rules4, mesh4),
+                MESH.shardings_for_tree(shapes.nu, axes, rules4, mesh4),
+                NamedSharding(mesh4, P()))
+            tpl = jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+            restored = CKPT.restore(d, 3, tpl, ssh4)
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(restored.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cells():
+    """dryrun.py end-to-end on reduced configs with the full 512-device
+    production mesh (single + multi pod)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "deepseek-moe-16b", "--shape", "train_4k", "--smoke",
+         "--mesh", "both"],
+        capture_output=True, text=True, timeout=500, env=env,
+    )
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert p.stdout.count(": ok") == 2, p.stdout

@@ -1,0 +1,73 @@
+"""PPU Phi-step: approximation quality vs exact Dirichlet + sparse oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.polya_urn import (
+    dirichlet_sample, ppu_normalize, ppu_sample, ppu_sample_sparse_np,
+)
+
+
+def test_ppu_moments_match_dirichlet(rng):
+    """PPU approximates Dir(beta + n): means agree, agreement improves
+    with counts (Terenin et al. 2019 convergence)."""
+    k, v = 4, 24
+    n = rng.poisson(20.0, size=(k, v)).astype(np.int32)
+    keys = jax.random.split(jax.random.key(0), 600)
+    ppu = np.stack([np.asarray(ppu_sample(kk, jnp.asarray(n), 0.01)[0])
+                    for kk in keys[:300]])
+    dirc = np.stack([np.asarray(dirichlet_sample(kk, jnp.asarray(n), 0.01))
+                     for kk in keys[300:]])
+    np.testing.assert_allclose(ppu.mean(0), dirc.mean(0), atol=5e-3)
+
+
+def test_ppu_integer_counts_and_normalization(rng):
+    n = rng.poisson(1.0, size=(8, 32)).astype(np.int32)
+    phi, varphi = ppu_sample(jax.random.key(1), jnp.asarray(n), 0.01)
+    assert varphi.dtype == jnp.int32
+    rows = np.asarray(varphi).sum(axis=1)
+    psum = np.asarray(phi).sum(axis=1)
+    for r, s in zip(rows, psum):
+        assert (abs(s - 1.0) < 1e-5) if r > 0 else s == 0.0
+
+
+def test_ppu_sparsity(rng):
+    """Small beta -> Phi is actually sparse (the paper's key memory win)."""
+    n = np.zeros((16, 512), np.int32)
+    n[rng.integers(0, 16, 100), rng.integers(0, 512, 100)] = rng.poisson(
+        5, 100
+    )
+    phi, varphi = ppu_sample(jax.random.key(2), jnp.asarray(n), 0.01)
+    nnz_frac = float((np.asarray(varphi) > 0).mean())
+    assert nnz_frac < 0.1
+
+
+def test_sparse_oracle_same_distribution(rng):
+    """Paper's doubly-sparse PPU draw == dense draw in distribution."""
+    k, v, beta = 6, 40, 0.05
+    n = np.zeros((k, v), np.int64)
+    rr, cc = rng.integers(0, k, 30), rng.integers(0, v, 30)
+    n[rr, cc] += rng.poisson(8, 30)
+    dense = np.stack([
+        np.asarray(ppu_sample(kk, jnp.asarray(n.astype(np.int32)), beta)[1])
+        for kk in jax.random.split(jax.random.key(3), 200)
+    ])
+    nz = n.nonzero()
+    sparse = np.stack([
+        ppu_sample_sparse_np(np.random.default_rng(i), nz[0], nz[1],
+                             n[nz], (k, v), beta)
+        for i in range(200)
+    ])
+    np.testing.assert_allclose(dense.mean(0), sparse.mean(0), atol=1.2)
+    np.testing.assert_allclose(
+        dense.sum(axis=(1, 2)).mean(), sparse.sum(axis=(1, 2)).mean(),
+        rtol=0.05,
+    )
+
+
+def test_zero_rows_stay_zero():
+    varphi = jnp.zeros((3, 10), jnp.int32).at[0, 1].set(4)
+    phi = ppu_normalize(varphi)
+    assert float(phi[0].sum()) == 1.0
+    assert float(phi[1:].sum()) == 0.0

@@ -1,0 +1,94 @@
+"""FGEM stick-breaking posterior (Prop. 1) + binomial-trick l sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hdp import d_histogram
+from repro.core.stick import (
+    gem_prior_sample, sample_l, sample_l_via_b_np, sample_psi,
+)
+
+
+def test_psi_normalized_and_flag_truncated(rng):
+    l = jnp.asarray(rng.poisson(5, 16).astype(np.int32))
+    psi = sample_psi(jax.random.key(0), l, gamma=1.0)
+    assert abs(float(psi.sum()) - 1.0) < 1e-5
+    assert (np.asarray(psi) >= 0).all()
+
+
+def test_psi_posterior_beta_moments():
+    """K=2 collapse: Psi_1 | l ~ Beta(1 + l_1, gamma + l_2) exactly."""
+    l = jnp.asarray([7, 3], jnp.int32)
+    gamma = 2.0
+    draws = np.stack([
+        np.asarray(sample_psi(k, l, gamma))
+        for k in jax.random.split(jax.random.key(1), 4000)
+    ])
+    a, b = 1.0 + 7, gamma + 3
+    mean = a / (a + b)
+    var = a * b / ((a + b) ** 2 * (a + b + 1))
+    assert abs(draws[:, 0].mean() - mean) < 4 * np.sqrt(var / 4000) + 1e-3
+    np.testing.assert_allclose(draws[:, 0].var(), var, rtol=0.15)
+
+
+def test_psi_concentrates_on_heavy_topics():
+    l = jnp.asarray([1000, 100, 10, 0, 0], jnp.int32)
+    draws = np.stack([
+        np.asarray(sample_psi(k, l, 1.0))
+        for k in jax.random.split(jax.random.key(2), 200)
+    ])
+    m = draws.mean(0)
+    assert m[0] > m[1] > m[2] > m[3]
+
+
+def test_binomial_trick_matches_explicit_b(rng):
+    """l via eq. (28) == l via per-token Bernoullis (eq. 26-27), in
+    distribution (mean/std over repetitions)."""
+    d_docs, k = 30, 5
+    m = rng.poisson(2.0, size=(d_docs, k)).astype(np.int64)
+    psi = rng.dirichlet(np.ones(k))
+    alpha = 0.8
+    dh = np.asarray(d_histogram(jnp.asarray(m.astype(np.int32)), 32))
+    trick = np.stack([
+        np.asarray(sample_l(kk, jnp.asarray(dh), jnp.asarray(psi, jnp.float32),
+                            alpha))
+        for kk in jax.random.split(jax.random.key(3), 400)
+    ])
+    explicit = np.stack([
+        sample_l_via_b_np(np.random.default_rng(i), m, psi, alpha)
+        for i in range(400)
+    ])
+    np.testing.assert_allclose(trick.mean(0), explicit.mean(0), rtol=0.1,
+                               atol=0.6)
+    np.testing.assert_allclose(trick.std(0), explicit.std(0), rtol=0.35,
+                               atol=0.6)
+
+
+def test_l_first_token_always_global(rng):
+    """j=1 -> Bernoulli prob 1: every document's first token per topic
+    counts toward l with certainty, so l_k >= D_{k,1} ... == here."""
+    m = (rng.random((20, 4)) < 0.5).astype(np.int32)  # m in {0, 1}
+    dh = d_histogram(jnp.asarray(m), 8)
+    l = sample_l(jax.random.key(4), dh, jnp.full((4,), 0.25), alpha=0.5)
+    np.testing.assert_array_equal(np.asarray(l), m.sum(0))
+
+
+def test_gem_prior_decays():
+    psi = np.stack([
+        np.asarray(gem_prior_sample(k, 64, 1.0))
+        for k in jax.random.split(jax.random.key(5), 300)
+    ]).mean(0)
+    assert psi[0] > psi[10] > psi[40]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=2, max_size=32),
+       st.floats(0.1, 10.0))
+def test_property_psi_simplex(l_list, gamma):
+    l = jnp.asarray(l_list, jnp.int32)
+    psi = sample_psi(jax.random.key(0), l, gamma)
+    arr = np.asarray(psi)
+    assert abs(arr.sum() - 1.0) < 1e-4
+    assert (arr >= 0).all()
