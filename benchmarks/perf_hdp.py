@@ -28,14 +28,78 @@ VARIANTS = [
 ]
 
 
-def main():
-    from repro.launch.dryrun import hdp_cell
+def stream_bench(args):
+    """Streaming-pipeline throughput: tokens/s and per-block wall time as
+    a function of block size, on a synthetic corpus several blocks deep.
+    Measures the minibatch driver itself (prefetch + per-block z-sweep +
+    statistic merge), not the dry-run roofline."""
+    import jax
+    import numpy as np
 
+    from repro.core import hdp as H
+    from repro.core.sharded import ShardedHDP
+    from repro.core.streaming import StreamingHDP
+    from repro.data.stream import ShardedCorpusStore
+    from repro.data.synthetic import paper_corpus
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(0)
+    corpus = paper_corpus("ap", rng, scale=args.scale, max_len=128)
+    mesh = make_host_mesh()
+    n_dev = len(jax.devices())
+    v_pad = ((corpus.V + mesh.shape["model"] - 1)
+             // mesh.shape["model"]) * mesh.shape["model"]
+    results = []
+    for block_docs in args.block_docs:
+        store = ShardedCorpusStore.from_corpus(
+            corpus, block_docs, doc_multiple=n_dev
+        )
+        cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=64,
+                          z_impl=args.z_impl, hist_cap=128)
+        stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+        state = stream.init_state(jax.random.key(0))
+        state = stream.iteration(state)  # compile + warm cache
+        t0 = time.time()
+        for _ in range(args.iters):
+            state = stream.iteration(state)
+        dt = time.time() - t0
+        rec = {
+            "mode": "streaming", "z_impl": args.z_impl,
+            "block_docs": store.block_docs, "blocks": store.num_blocks,
+            "tokens": store.num_tokens, "iters": args.iters,
+            "sec_per_iter": round(dt / args.iters, 3),
+            "sec_per_block": round(
+                dt / (args.iters * store.num_blocks), 4),
+            "tokens_per_s": round(
+                store.num_tokens * args.iters / dt, 1),
+        }
+        print(f"block_docs={store.block_docs}: "
+              f"{rec['tokens_per_s']:,} tok/s "
+              f"({rec['sec_per_block']}s/block)", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="hdp-pubmed")
     ap.add_argument("--out", default="perf_hdp.json")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--stream", action="store_true",
+                    help="benchmark the streaming minibatch driver")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--topics", type=int, default=100)
+    ap.add_argument("--z-impl", default="sparse")
+    ap.add_argument("--block-docs", type=int, nargs="+",
+                    default=[64, 256, 1024])
     args = ap.parse_args()
+    if args.stream:
+        return stream_bench(args)
+
+    from repro.launch.dryrun import hdp_cell
+
     multi = args.mesh == "multi"
     results = []
     for label, kw in VARIANTS:

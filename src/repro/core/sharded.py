@@ -25,6 +25,14 @@ are derived from exactly these):
 Baseline = paper-faithful replicated-Phi pattern (MALLET shared memory ->
 all_gather). The config flags `gather_tables` / `phi_dtype` select the
 beyond-paper optimized variants measured in EXPERIMENTS.md §Perf.
+
+The iteration is decomposed into three mesh-local sub-steps —
+``_phi_tables`` (1-3), ``_z_sweep`` (4), ``_block_stats`` (5-7a) — plus
+a replicated tail (7b: l-step + Psi-step). The monolithic
+``iteration_fn`` composes all of them inside one shard_map; the
+streaming driver (core/streaming.py) shard_maps them separately so the
+Phi-step runs once per Gibbs iteration while the z-sweep and the
+statistics merge run once per corpus block.
 """
 
 from __future__ import annotations
@@ -36,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import hdp as H
 from repro.core.alias import alias_build
 from repro.core.stick import sample_l, sample_psi
@@ -72,6 +81,8 @@ class ShardedHDP:
             raise ValueError(
                 f"V={cfg.V} must divide model axis {mesh.shape[model_axis]}"
             )
+        if cfg.z_impl not in ("dense", "sparse", "pallas"):
+            raise ValueError(f"unknown z_impl {cfg.z_impl!r}")
 
     # -- sharding specs ---------------------------------------------------
     def specs(self) -> dict[str, P]:
@@ -105,13 +116,17 @@ class ShardedHDP:
             NamedSharding(self.mesh, s["mask"]),
         )
 
-    # -- the iteration ----------------------------------------------------
-    def _local_iteration(self, z, tokens, mask, n_shard, psi, l, key, it):
+    # -- mesh-local sub-steps ---------------------------------------------
+    # Each of these runs INSIDE a shard_map region (collectives explicit).
+
+    def _phi_tables(self, n_shard, psi, k_phi):
+        """Steps 1-3: PPU Phi-step on the vocab shard + z-step operand
+        build/gather. Returns (phi_shard, varphi_shard, ztables) where
+        ztables is the impl-specific tuple of replicated z-step operands.
+        """
         cfg = self.cfg
         maxis = self.model_axis
-        key, k_phi, k_u, k_l, k_psi = jax.random.split(key, 5)
         midx = jax.lax.axis_index(maxis)
-        dev_idx = jax.lax.axis_index(tuple(self.mesh.axis_names))
 
         # 1. Phi-step: PPU on the local vocab shard (model-parallel).
         #    Same key within a model column -> replicated over (pod, data).
@@ -140,24 +155,14 @@ class ShardedHDP:
             q_a = jax.lax.all_gather(q_a_s, maxis, axis=0, tiled=True)
             fpack = jax.lax.all_gather(fpack_s, maxis, axis=0, tiled=True)
             ipack = jax.lax.all_gather(ipack_s, maxis, axis=0, tiled=True)
-            u = jax.random.uniform(
-                jax.random.fold_in(k_u, dev_idx),
-                tokens.shape + (3,),
-                jnp.float32,
-            )
-            z = zops.hdp_z_pallas(
-                tokens, mask, z, u, q_a, fpack, ipack, kk=cfg.K,
-                interpret=True,
-            )
-            return self._finish_iteration(
-                z, tokens, mask, phi_shard, varphi_shard, psi, key, it,
-                k_l, k_psi,
-            )
+            return phi_shard, varphi_shard, (q_a, fpack, ipack)
 
         # keep the gathered Phi in phi_dtype: converting to f32 here lets
         # XLA hoist the convert BEFORE the all-gather, doubling the wire
         # bytes (verified on HLO). The z-step promotes per-op instead.
         phi = jax.lax.all_gather(phi_shard, maxis, axis=1, tiled=True)
+        if cfg.z_impl == "dense":
+            return phi_shard, varphi_shard, (phi,)
         if self.gather_tables:
             wa = (phi_shard.astype(jnp.float32) * (cfg.alpha * psi)[:, None]).T
             qa_shard = jnp.sum(wa, axis=1)
@@ -171,44 +176,69 @@ class ShardedHDP:
             wa = (phi * (cfg.alpha * psi)[:, None]).T
             q_a = jnp.sum(wa, axis=1)
             aprob, aalias = alias_build(wa)
+        return phi_shard, varphi_shard, (phi, q_a, aprob, aalias)
 
-        # 4. z-step on the local document shard (no communication).
+    def _z_sweep(self, ztables, z, tokens, mask, psi, k_u):
+        """Step 4: z-step on the local document shard (no communication).
+
+        ``k_u`` must already be block-specific for streaming; the
+        per-device fold happens here so a single-block stream consumes
+        randomness bitwise-identically to the monolithic iteration.
+        """
+        cfg = self.cfg
+        dev_idx = jax.lax.axis_index(tuple(self.mesh.axis_names))
         u = jax.random.uniform(
             jax.random.fold_in(k_u, dev_idx), tokens.shape + (3,), jnp.float32
         )
-        if cfg.z_impl == "dense":
-            z = H.z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, u,
-                               unroll=cfg.unroll_z)
-        else:
-            z = H.z_step_sparse_tables(
-                tokens, mask, z, phi, cfg.alpha, u, cfg.bucket,
-                q_a, aprob, aalias, unroll=cfg.unroll_z,
+        if cfg.z_impl == "pallas":
+            from repro.kernels.hdp_z import ops as zops
+
+            q_a, fpack, ipack = ztables
+            return zops.hdp_z_pallas(
+                tokens, mask, z, u, q_a, fpack, ipack, kk=cfg.K,
+                interpret=True,
             )
-        return self._finish_iteration(
-            z, tokens, mask, phi_shard, varphi_shard, psi, key, it, k_l, k_psi
+        if cfg.z_impl == "dense":
+            (phi,) = ztables
+            return H.z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, u,
+                                  unroll=cfg.unroll_z)
+        phi, q_a, aprob, aalias = ztables
+        return H.z_step_sparse_tables(
+            tokens, mask, z, phi, cfg.alpha, u, cfg.bucket,
+            q_a, aprob, aalias, unroll=cfg.unroll_z,
         )
 
-    def _finish_iteration(
-        self, z, tokens, mask, phi_shard, varphi_shard, psi, key, it,
-        k_l, k_psi,
-    ):
-        """Steps 5-7: sufficient statistics + l-step + Psi-step."""
-        cfg = self.cfg
-        maxis = self.model_axis
+    def _block_stats(self, z, tokens, mask):
+        """Steps 5-7a: sufficient statistics for one document block.
 
-        # 5./6. topic-word statistic: reduce-scatter over model, then
-        #       all-reduce over the replication axes.
+        Returns (n_shard, dh) — the vocab-sharded topic-word statistic
+        and the fully-reduced (replicated) document histogram. Both are
+        pure sums over documents, so per-block results merge by addition
+        (exactly: integer arithmetic throughout).
+        """
+        cfg = self.cfg
         n_local = H.count_n(z, tokens, mask, cfg.K, cfg.V)
         n_shard = jax.lax.psum_scatter(
-            n_local, maxis, scatter_dimension=1, tiled=True
+            n_local, self.model_axis, scatter_dimension=1, tiled=True
         )
         if self.repl_axes:
             n_shard = jax.lax.psum(n_shard, self.repl_axes)
-
-        # 7. l and Psi: replicated-deterministic (same key everywhere).
         m = H.doc_topic_counts(z, mask, cfg.K)
         dh = H.d_histogram(m, cfg.hist_cap)
         dh = jax.lax.psum(dh, tuple(self.mesh.axis_names))
+        return n_shard, dh
+
+    # -- the iteration ----------------------------------------------------
+    def _local_iteration(self, z, tokens, mask, n_shard, psi, l, key, it):
+        cfg = self.cfg
+        key, k_phi, k_u, k_l, k_psi = jax.random.split(key, 5)
+        phi_shard, varphi_shard, ztables = self._phi_tables(
+            n_shard, psi, k_phi
+        )
+        z = self._z_sweep(ztables, z, tokens, mask, psi, k_u)
+        n_shard, dh = self._block_stats(z, tokens, mask)
+
+        # 7b. l and Psi: replicated-deterministic (same key everywhere).
         l = sample_l(k_l, dh, psi, cfg.alpha)
         psi = sample_psi(k_psi, l, cfg.gamma)
 
@@ -224,7 +254,7 @@ class ShardedHDP:
             s["z"], s["n"], s["phi"], s["varphi"], s["psi"], s["l"],
             s["key"], s["it"],
         )
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             self._local_iteration,
             mesh=self.mesh,
             in_specs=state_in,
@@ -251,6 +281,49 @@ class ShardedHDP:
             in_shardings=(ss, ts, ms),
             out_shardings=ss,
             donate_argnums=(0,),
+        )
+
+    # -- streaming sub-step entry points ----------------------------------
+    # shard_map wrappers over the same mesh-local functions, for drivers
+    # that sweep the corpus block-by-block (core/streaming.py).
+
+    def _ztable_specs(self):
+        if self.cfg.z_impl == "pallas":
+            return (P(), P(), P())
+        if self.cfg.z_impl == "dense":
+            return (P(),)
+        return (P(), P(), P(), P())
+
+    def phi_tables_fn(self):
+        """(n, psi, k_phi) -> (phi, varphi, ztables); one call/iteration."""
+        s = self.specs()
+        return compat.shard_map(
+            self._phi_tables,
+            mesh=self.mesh,
+            in_specs=(s["n"], s["psi"], s["key"]),
+            out_specs=(s["phi"], s["varphi"], self._ztable_specs()),
+            check_vma=False,
+        )
+
+    def z_block_fn(self):
+        """(ztables, z_b, tokens_b, mask_b, psi, k_ub) ->
+        (z_b', n_contrib, dh_contrib); one call per corpus block."""
+        s = self.specs()
+
+        def local(ztables, z, tokens, mask, psi, k_ub):
+            z = self._z_sweep(ztables, z, tokens, mask, psi, k_ub)
+            n_shard, dh = self._block_stats(z, tokens, mask)
+            return z, n_shard, dh
+
+        return compat.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(
+                self._ztable_specs(), s["z"], s["tokens"], s["mask"],
+                s["psi"], s["key"],
+            ),
+            out_specs=(s["z"], s["n"], P()),
+            check_vma=False,
         )
 
     # -- state construction -------------------------------------------------

@@ -1,0 +1,324 @@
+"""Streaming minibatch Gibbs driver: corpora larger than device memory.
+
+``StreamingHDP`` layers on the mesh-local sub-steps of
+``core/sharded.py`` to sweep a ``ShardedCorpusStore`` block-by-block
+within each Gibbs iteration:
+
+  * the model state (n, phi, varphi, psi, l) stays device-resident
+    across blocks — O(K*V), independent of corpus size;
+  * topic indicators z live host-side, one (DB, L) slab per block, and
+    visit the device only while their block is being swept;
+  * the Phi-step (PPU draw + z-step table build/gather) runs ONCE per
+    iteration — valid because Phi and Psi are held fixed during the
+    z-step, making the block sweep embarrassingly parallel over blocks;
+  * per-block sufficient statistics (topic-word counts, the l-step
+    document histogram) merge by integer addition into accumulators.
+
+Randomness contract: each iteration splits the chain key exactly like
+the monolithic sampler (key -> k_phi, k_u, k_l, k_psi); block b derives
+its z-step uniforms from ``k_u`` for b == 0 and ``fold_in(k_u, b)``
+otherwise, so a single-block stream consumes randomness — and therefore
+produces states — bitwise-identically to the monolithic
+``ShardedHDP.jit_iteration`` (asserted by tests/test_streaming.py).
+
+Checkpoints are resumable mid-epoch: the payload carries the block
+cursor, the partial accumulators, and the pre-split chain key; resume
+re-derives the iteration keys and the z-step tables deterministically
+and continues from the cursor block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hdp as H
+from repro.core.polya_urn import ppu_sample
+from repro.core.sharded import ShardedHDP
+from repro.core.stick import gem_prior_sample, sample_l, sample_psi
+from repro.data.stream import BlockPrefetcher, ShardedCorpusStore
+from repro.train import checkpoint as CKPT
+
+
+class StreamingState(NamedTuple):
+    """Device-resident model state + host-resident per-block z slabs."""
+    n: jax.Array        # (K, V) int32, vocab-sharded
+    phi: jax.Array      # (K, V)
+    varphi: jax.Array   # (K, V) int32
+    psi: jax.Array      # (K,)
+    l: jax.Array        # (K,)
+    key: jax.Array      # chain key (pre-split for the NEXT iteration)
+    it: jax.Array       # completed Gibbs iterations
+    z_blocks: np.ndarray  # (B, DB, L) int32, host memory (or memmap)
+
+
+class StreamingHDP:
+    """Minibatch Gibbs driver over a block store.
+
+    Device memory holds one corpus block (two with prefetch) plus the
+    O(K*V) model state, regardless of corpus size.
+    """
+
+    def __init__(self, sharded: ShardedHDP, store: ShardedCorpusStore, *,
+                 prefetch_depth: int = 2):
+        self.sh = sharded
+        self.cfg = sharded.cfg
+        self.store = store
+        self.prefetch_depth = prefetch_depth
+        ss = sharded.state_shardings()
+        ts, ms = sharded.corpus_shardings()
+        self._z_sh, self._n_sh = ss.z, ss.n
+        self._repl_sh = ss.psi
+        self._ts, self._ms = ts, ms
+        self._phi_fn = jax.jit(sharded.phi_tables_fn())
+        self._z_fn = jax.jit(sharded.z_block_fn(), donate_argnums=(1,))
+        self._split_fn = jax.jit(
+            functools.partial(jax.random.split, num=5))
+        cfg = self.cfg
+        self._tail_fn = jax.jit(
+            lambda dh, psi, k_l, k_psi: (
+                lambda l: (l, sample_psi(k_psi, l, cfg.gamma))
+            )(sample_l(k_l, dh, psi, cfg.alpha))
+        )
+
+    # -- init --------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> StreamingState:
+        """Single-topic init, bitwise-matching ShardedHDP.init_state on
+        the same (concatenated) corpus: z = 0 everywhere, n counted
+        blockwise (exact integer merge), Phi/Psi drawn from the same
+        subkeys."""
+        cfg = self.cfg
+        store = self.store
+        kp, kd = jax.random.split(key)
+        count = jax.jit(
+            lambda t, m: H.count_n(jnp.zeros_like(t), t, m, cfg.K, cfg.V)
+        )
+        n = np.zeros((cfg.K, cfg.V), np.int64)
+        for blk in store.blocks():
+            n += np.asarray(count(jnp.asarray(blk.tokens),
+                                  jnp.asarray(blk.mask)), np.int64)
+        n = jnp.asarray(n.astype(np.int32))
+        phi, varphi = ppu_sample(kp, n, cfg.beta)
+        psi = gem_prior_sample(kd, cfg.K, cfg.gamma)
+        z_blocks = np.zeros(
+            (store.num_blocks, store.block_docs, store.max_len), np.int32
+        )
+        return StreamingState(
+            n=jax.device_put(n, self._n_sh),
+            phi=jax.device_put(phi, self._n_sh),
+            varphi=jax.device_put(varphi, self._n_sh),
+            psi=jax.device_put(psi, self._repl_sh),
+            l=jax.device_put(jnp.zeros((cfg.K,), jnp.int32), self._repl_sh),
+            key=key, it=jnp.int32(0), z_blocks=z_blocks,
+        )
+
+    # -- one iteration (optionally partial, for checkpoint/resume) --------
+    def _stage(self, blk):
+        return (
+            blk.index,
+            jax.device_put(jnp.asarray(blk.tokens), self._ts),
+            jax.device_put(jnp.asarray(blk.mask), self._ms),
+            jax.device_put(jnp.asarray(blk.z), self._z_sh),
+        )
+
+    def _staged_blocks(self, z_blocks, start: int):
+        class _Blk(NamedTuple):
+            index: int
+            tokens: np.ndarray
+            mask: np.ndarray
+            z: np.ndarray
+
+        def gen():
+            for blk in self.store.blocks(start):
+                yield _Blk(blk.index, blk.tokens, blk.mask,
+                           z_blocks[blk.index])
+
+        return BlockPrefetcher(gen(), self._stage,
+                               depth=self.prefetch_depth)
+
+    def iteration(
+        self, state: StreamingState, *,
+        start_block: int = 0, n_acc=None, dh_acc=None, ztables=None,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every_blocks: Optional[int] = None,
+        stop_after_blocks: Optional[int] = None,
+    ) -> Optional[StreamingState]:
+        """One Gibbs iteration = one sweep over all blocks.
+
+        The keyword arguments exist for mid-epoch resume (start_block +
+        accumulators restored from a checkpoint) and for tests that
+        simulate a mid-epoch kill (``stop_after_blocks``). Returns the
+        advanced state, or None if the sweep was stopped early — the
+        in-flight iteration then lives ONLY in the checkpoint (a partial
+        save is forced at the stop cursor), because the swept z slabs
+        have already been updated in place while n/psi/key have not.
+        ``stop_after_blocks`` therefore requires ``ckpt_dir``.
+        """
+        cfg = self.cfg
+        if stop_after_blocks is not None and not ckpt_dir:
+            raise ValueError(
+                "stop_after_blocks without ckpt_dir would drop the "
+                "partial sweep (z slabs are updated in place)"
+            )
+        key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
+        if ztables is None:
+            phi_shard, varphi_shard, ztables = self._phi_fn(
+                state.n, state.psi, k_phi
+            )
+        else:
+            phi_shard, varphi_shard, ztables = ztables
+        if n_acc is None:
+            n_acc = jax.device_put(
+                jnp.zeros((cfg.K, cfg.V), jnp.int32), self._n_sh)
+        if dh_acc is None:
+            dh_acc = jax.device_put(
+                jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
+                self._repl_sh)
+
+        z_blocks = state.z_blocks
+        done = 0
+        saved_cursor = -1
+        staged = self._staged_blocks(z_blocks, start_block)
+        try:
+            for b, tokens_b, mask_b, z_b in staged:
+                # block 0 consumes k_u unchanged => a single-block stream
+                # is bitwise the monolithic sampler; later blocks fold
+                # their index.
+                k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
+                z_b, n_c, dh_c = self._z_fn(
+                    ztables, z_b, tokens_b, mask_b, state.psi, k_ub
+                )
+                n_acc = n_acc + n_c
+                dh_acc = dh_acc + dh_c
+                z_blocks[b] = np.asarray(z_b)
+                done += 1
+                cursor = b + 1
+                if (ckpt_dir and ckpt_every_blocks
+                        and cursor < self.store.num_blocks
+                        and cursor % ckpt_every_blocks == 0):
+                    self._save_partial(ckpt_dir, state, cursor, n_acc, dh_acc)
+                    saved_cursor = cursor
+                if stop_after_blocks is not None and done >= stop_after_blocks:
+                    if cursor < self.store.num_blocks:
+                        if saved_cursor != cursor:
+                            self._save_partial(
+                                ckpt_dir, state, cursor, n_acc, dh_acc)
+                        return None
+        finally:
+            staged.close()  # unblock the prefetch worker on early exit
+        l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
+        return StreamingState(
+            n=n_acc, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
+            key=key, it=state.it + 1, z_blocks=z_blocks,
+        )
+
+    def run(
+        self, state: StreamingState, iters: int, *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every_iters: Optional[int] = None,
+        ckpt_every_blocks: Optional[int] = None,
+    ) -> StreamingState:
+        for _ in range(iters):
+            state = self.iteration(
+                state, ckpt_dir=ckpt_dir, ckpt_every_blocks=ckpt_every_blocks
+            )
+            if (ckpt_dir and ckpt_every_iters
+                    and int(state.it) % ckpt_every_iters == 0):
+                self.save(ckpt_dir, state)
+        return state
+
+    # -- checkpointing ----------------------------------------------------
+    # One logical "step" per saved payload: step = it * B + cursor, so
+    # mid-epoch checkpoints order correctly between iteration boundaries.
+
+    def _payload(self, state: StreamingState, cursor: int, n_acc, dh_acc):
+        return {
+            "model": {
+                "n": state.n, "phi": state.phi, "varphi": state.varphi,
+                "psi": state.psi, "l": state.l, "key": state.key,
+                "it": state.it,
+            },
+            "z_blocks": state.z_blocks,
+            "cursor": np.int64(cursor),
+            "n_acc": n_acc,
+            "dh_acc": dh_acc,
+        }
+
+    def _template(self):
+        cfg, store = self.cfg, self.store
+        z = np.zeros((store.num_blocks, store.block_docs, store.max_len),
+                     np.int32)
+        return {
+            "model": {
+                "n": jnp.zeros((cfg.K, cfg.V), jnp.int32),
+                "phi": jnp.zeros((cfg.K, cfg.V), jnp.float32),
+                "varphi": jnp.zeros((cfg.K, cfg.V), jnp.int32),
+                "psi": jnp.zeros((cfg.K,), jnp.float32),
+                "l": jnp.zeros((cfg.K,), jnp.int32),
+                "key": jax.random.key(0),
+                "it": jnp.int32(0),
+            },
+            "z_blocks": z,
+            "cursor": np.int64(0),
+            "n_acc": jnp.zeros((cfg.K, cfg.V), jnp.int32),
+            "dh_acc": jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
+        }
+
+    def save(self, ckpt_dir: str, state: StreamingState) -> str:
+        """Iteration-boundary checkpoint (cursor = 0)."""
+        zero_n = jnp.zeros((self.cfg.K, self.cfg.V), jnp.int32)
+        zero_dh = jnp.zeros((self.cfg.K, self.cfg.hist_cap + 1), jnp.int32)
+        step = int(state.it) * self.store.num_blocks
+        return CKPT.save(ckpt_dir, step,
+                         self._payload(state, 0, zero_n, zero_dh))
+
+    def _save_partial(self, ckpt_dir, state, cursor, n_acc, dh_acc):
+        step = int(state.it) * self.store.num_blocks + cursor
+        return CKPT.save(ckpt_dir, step,
+                         self._payload(state, cursor, n_acc, dh_acc))
+
+    def restore(self, ckpt_dir: str):
+        """Returns (state, resume_kwargs): pass resume_kwargs to
+        ``iteration`` to finish a partially-swept epoch (empty dict when
+        the checkpoint is at an iteration boundary)."""
+        payload = CKPT.restore_latest(ckpt_dir, self._template())
+        if payload is None:
+            return None, {}
+        store = self.store
+        want = (store.num_blocks, store.block_docs, store.max_len)
+        got = tuple(np.asarray(payload["z_blocks"]).shape)
+        if got != want:
+            raise ValueError(
+                f"checkpoint block geometry {got} does not match the store "
+                f"{want} — resume with the block_docs/corpus the checkpoint "
+                f"was written with"
+            )
+        m = payload["model"]
+        state = StreamingState(
+            n=jax.device_put(m["n"], self._n_sh),
+            phi=jax.device_put(m["phi"], self._n_sh),
+            varphi=jax.device_put(m["varphi"], self._n_sh),
+            psi=jax.device_put(m["psi"], self._repl_sh),
+            l=jax.device_put(m["l"], self._repl_sh),
+            key=m["key"], it=m["it"],
+            # np.array (not asarray): restored arrays are read-only views
+            # and the sweep writes z slabs in place.
+            z_blocks=np.array(payload["z_blocks"], np.int32),
+        )
+        cursor = int(payload["cursor"])
+        if cursor == 0:
+            return state, {}
+        # Mid-epoch: re-derive the current iteration's tables from the
+        # pre-split key (deterministic), hand back the partial sums.
+        _, k_phi, _, _, _ = self._split_fn(state.key)
+        ztables = self._phi_fn(state.n, state.psi, k_phi)
+        return state, {
+            "start_block": cursor,
+            "n_acc": jax.device_put(payload["n_acc"], self._n_sh),
+            "dh_acc": jax.device_put(payload["dh_acc"], self._repl_sh),
+            "ztables": ztables,
+        }

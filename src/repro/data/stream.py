@@ -1,0 +1,182 @@
+"""Streaming corpus store + host->device prefetch for minibatch Gibbs.
+
+The monolithic sampler keeps the whole corpus as one device-resident
+(D, L) block, which caps corpus size at device memory — nothing near the
+paper's PubMed scale (8m documents / 768m tokens) fits. The streaming
+pipeline removes that cap:
+
+  * ``ShardedCorpusStore`` packs documents into ``num_blocks`` fixed-shape
+    ``(DB, L)`` int32 blocks with boolean masks. Fixed shapes mean ONE
+    compiled XLA program serves every block; DB is padded so every block
+    shards evenly over the mesh document axes. Blocks may live in RAM or
+    in an ``np.memmap`` on disk (corpora larger than host memory).
+  * ``BlockPrefetcher`` double-buffers the host->device transfer: while
+    the sampler sweeps block b, a background thread stages block b+1 onto
+    the device, so the transfer hides behind compute.
+
+Only per-block tensors (tokens, mask, z) plus the O(K*V) model state are
+ever device-resident — device memory is bounded by the block budget, not
+the corpus size (StreamingHDP in core/streaming.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Iterator, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+
+
+class CorpusBlock(NamedTuple):
+    index: int
+    tokens: np.ndarray  # (DB, L) int32
+    mask: np.ndarray    # (DB, L) bool
+    doc_start: int      # global row offset of this block
+
+
+class ShardedCorpusStore:
+    """Fixed-shape block view over a packed corpus.
+
+    ``block_docs`` (DB) is rounded up so the final block pads with
+    zero-mask rows; ``doc_multiple`` forces DB % doc_multiple == 0 so each
+    block shards evenly over the mesh document axes.
+    """
+
+    def __init__(self, tokens: np.ndarray, mask: np.ndarray, V: int,
+                 block_docs: int, *, doc_multiple: int = 1):
+        if block_docs <= 0:
+            raise ValueError("block_docs must be positive")
+        block_docs = ((block_docs + doc_multiple - 1)
+                      // doc_multiple) * doc_multiple
+        self.tokens = tokens
+        self.mask = mask
+        self.V = V
+        self.block_docs = block_docs
+        self.num_docs = tokens.shape[0]
+        self.max_len = tokens.shape[1]
+        self.num_blocks = max(
+            (self.num_docs + block_docs - 1) // block_docs, 1
+        )
+        self._num_tokens: Optional[int] = None
+
+    @classmethod
+    def from_corpus(cls, corpus: Corpus, block_docs: int, *,
+                    doc_multiple: int = 1) -> "ShardedCorpusStore":
+        return cls(corpus.tokens, corpus.mask, corpus.V, block_docs,
+                   doc_multiple=doc_multiple)
+
+    @property
+    def num_tokens(self) -> int:
+        # cached: a full mask reduction is a whole-corpus disk scan for
+        # memmap-backed stores.
+        if self._num_tokens is None:
+            self._num_tokens = int(np.asarray(self.mask).sum())
+        return self._num_tokens
+
+    def block(self, b: int) -> CorpusBlock:
+        if not 0 <= b < self.num_blocks:
+            raise IndexError(f"block {b} out of range [0, {self.num_blocks})")
+        lo = b * self.block_docs
+        hi = min(lo + self.block_docs, self.num_docs)
+        tokens = np.zeros((self.block_docs, self.max_len), np.int32)
+        mask = np.zeros((self.block_docs, self.max_len), bool)
+        tokens[: hi - lo] = self.tokens[lo:hi]
+        mask[: hi - lo] = self.mask[lo:hi]
+        return CorpusBlock(index=b, tokens=tokens, mask=mask, doc_start=lo)
+
+    def blocks(self, start: int = 0) -> Iterator[CorpusBlock]:
+        for b in range(start, self.num_blocks):
+            yield self.block(b)
+
+    # -- disk spill (corpora larger than host RAM) ------------------------
+    def save(self, path: str) -> str:
+        """Write the packed corpus as memmap-able .npy files + metadata."""
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "tokens.npy"), np.asarray(self.tokens))
+        np.save(os.path.join(path, "mask.npy"), np.asarray(self.mask))
+        with open(os.path.join(path, "store.json"), "w") as f:
+            json.dump({"V": self.V, "block_docs": self.block_docs}, f)
+        return path
+
+    @classmethod
+    def open(cls, path: str, block_docs: Optional[int] = None, *,
+             doc_multiple: int = 1) -> "ShardedCorpusStore":
+        """Memory-map a saved store — blocks are read lazily from disk."""
+        with open(os.path.join(path, "store.json")) as f:
+            meta = json.load(f)
+        tokens = np.load(os.path.join(path, "tokens.npy"), mmap_mode="r")
+        mask = np.load(os.path.join(path, "mask.npy"), mmap_mode="r")
+        return cls(tokens, mask, meta["V"],
+                   block_docs or meta["block_docs"],
+                   doc_multiple=doc_multiple)
+
+
+class BlockPrefetcher:
+    """Double-buffered host->device block staging.
+
+    Wraps an iterator of host items; a daemon thread runs ``stage`` (e.g.
+    ``jax.device_put`` with the corpus shardings) up to ``depth`` items
+    ahead of the consumer, so the host->device copy of block b+1 overlaps
+    the Gibbs sweep of block b.
+    """
+
+    _DONE = object()
+
+    def __init__(self, items, stage, *, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+        def put(item) -> bool:
+            # bounded put that aborts when the consumer closes us, so an
+            # early-exiting consumer never leaves the worker blocked on a
+            # full queue pinning staged device buffers.
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    pass
+            return False
+
+        def worker():
+            try:
+                for item in items:
+                    if self._stop.is_set():
+                        break
+                    if not put(stage(item)):
+                        break
+            except BaseException as e:  # surfaced on the consumer side
+                self._err = e
+            finally:
+                put(self._DONE)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def close(self):
+        """Stop the worker and release staged items (idempotent)."""
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5)
+
+    def __iter__(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is self._DONE:
+                    if self._err is not None:
+                        raise self._err
+                    return
+                yield item
+        finally:
+            self.close()

@@ -22,10 +22,10 @@ from repro.kernels.hdp_z.hdp_z import hdp_z_pallas
 from repro.kernels.hdp_z.ref import hdp_z_ref
 
 
-@functools.partial(jax.jit, static_argnames=("w", "compact"))
+@functools.partial(jax.jit, static_argnames=("w", "compact", "order"))
 def build_word_sparse_tables(
     phi: jax.Array, psi: jax.Array, alpha: float, w: int,
-    compact: bool = False,
+    compact: bool = False, order: str = "value",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (q_a (V,), fpack (V,2,W), ipack (V,2,W)).
 
@@ -36,10 +36,23 @@ def build_word_sparse_tables(
     K* < 32768), halving the table broadcast — the §Perf "compact tables"
     variant. bf16 phi values only perturb sampling weights ~1e-3
     relatively, within the PPU approximation's own error.
+
+    ``order`` fixes the slot order within each word's table: "value"
+    (top_k order, the production default) or "topic" (ascending topic
+    id). Topic order makes every left-to-right partial sum over the
+    table bitwise-equal to the same sum over a dense ascending-topic
+    sweep (zero slots add exactly 0.0), which is what the z-step
+    conformance contract (core/conformance.py) relies on.
     """
     pt = phi.T  # (V, K)
     w = min(w, phi.shape[0])
     vals, idx = jax.lax.top_k(pt, w)
+    if order == "topic":
+        perm = jnp.argsort(idx, axis=-1)
+        vals = jnp.take_along_axis(vals, perm, axis=-1)
+        idx = jnp.take_along_axis(idx, perm, axis=-1)
+    elif order != "value":
+        raise ValueError(f"unknown table order {order!r}")
     ids = idx.astype(jnp.int32)
     wa = vals * (jnp.float32(alpha) * psi)[ids]
     q_a = jnp.sum(wa, axis=-1)

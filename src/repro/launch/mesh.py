@@ -20,13 +20,16 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.compat import AxisType
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
+    return compat.make_mesh(
         shape, axes, axis_types=(AxisType.Auto,) * len(axes)
     )
 
@@ -37,7 +40,7 @@ def make_host_mesh(shape=None, axes=("data", "model")) -> Mesh:
     if shape is None:
         half = 2 ** (int(math.log2(n)) // 2) if n > 1 else 1
         shape = (n // half, half)
-    return jax.make_mesh(
+    return compat.make_mesh(
         shape, axes, axis_types=(AxisType.Auto,) * len(axes)
     )
 

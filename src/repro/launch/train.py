@@ -90,6 +90,55 @@ def train_lm(args):
     return state, history
 
 
+def train_hdp_streaming(args, corpus, sh):
+    """Minibatch path: corpus swept block-by-block in bounded device
+    memory, resumable mid-epoch (block cursor + RNG in the checkpoint)."""
+    from repro.core.streaming import StreamingHDP
+    from repro.data.stream import ShardedCorpusStore
+
+    n_dev = len(jax.devices())
+    store = ShardedCorpusStore.from_corpus(
+        corpus, args.block_docs, doc_multiple=n_dev
+    )
+    stream = StreamingHDP(sh, store)
+    state, resume_kw = (None, {})
+    if args.ckpt:
+        state, resume_kw = stream.restore(args.ckpt)
+        if state is not None:
+            print(f"restored streaming state: iteration {int(state.it)}, "
+                  f"block cursor {resume_kw.get('start_block', 0)}")
+    if state is None:
+        state = stream.init_state(jax.random.key(args.seed))
+    print(f"streaming: {store.num_blocks} blocks x {store.block_docs} docs "
+          f"(corpus {store.num_docs} docs, {store.num_tokens} tokens)")
+
+    history = []
+    t0 = time.time()
+    for i in range(args.iters):
+        state = stream.iteration(
+            state, ckpt_dir=args.ckpt,
+            ckpt_every_blocks=args.ckpt_every_blocks, **resume_kw,
+        )
+        resume_kw = {}
+        if (i + 1) % args.log_every == 0:
+            history.append({
+                "iter": int(state.it),
+                "active_topics": int(jnp.sum(jnp.sum(state.n, 1) > 0)),
+                "flag_tokens": int(state.n[-1].sum()),
+            })
+            print(history[-1], flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            stream.save(args.ckpt, state)
+    dt = time.time() - t0
+    print(json.dumps({
+        "corpus": args.hdp, "tokens": store.num_tokens, "mode": "streaming",
+        "blocks": store.num_blocks, "iters": args.iters,
+        "sec_per_iter": round(dt / args.iters, 3),
+        "tokens_per_s": round(store.num_tokens * args.iters / dt, 1),
+    }))
+    return state, history
+
+
 def train_hdp(args):
     from repro.core import hdp as H
     from repro.core.sharded import ShardedHDP
@@ -108,6 +157,8 @@ def train_hdp(args):
     cfg = H.HDPConfig(K=k_topics, V=v_pad, bucket=args.bucket,
                       z_impl=args.z_impl, hist_cap=min(corpus.max_len, 256))
     sh = ShardedHDP(mesh, cfg)
+    if args.stream:
+        return train_hdp_streaming(args, corpus, sh)
     tokens = jax.device_put(jnp.asarray(corpus.tokens), sh.corpus_shardings()[0])
     mask = jax.device_put(jnp.asarray(corpus.mask), sh.corpus_shardings()[1])
 
@@ -164,6 +215,13 @@ def main():
     ap.add_argument("--topics", type=int, default=100)
     ap.add_argument("--bucket", type=int, default=64)
     ap.add_argument("--z-impl", default="sparse")
+    ap.add_argument("--stream", action="store_true",
+                    help="sweep the corpus in fixed-shape blocks (bounded "
+                         "device memory; required beyond-device-memory runs)")
+    ap.add_argument("--block-docs", type=int, default=4096,
+                    help="documents per streaming block")
+    ap.add_argument("--ckpt-every-blocks", type=int, default=None,
+                    help="mid-epoch checkpoint cadence (streaming only)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)

@@ -94,6 +94,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def restore_latest(ckpt_dir: str, template, shardings=None):
+    """Restore the most recent checkpoint, or None when the directory has
+    none. Payloads may be arbitrary pytrees — the streaming HDP driver
+    stores {model state, z blocks, block cursor, partial accumulators}
+    and resumes mid-epoch from the cursor (core/streaming.py)."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return restore(ckpt_dir, step, template, shardings)
+
+
 def restore(ckpt_dir: str, step: int, template, shardings=None):
     """Rebuild ``template``-structured state; reshard onto ``shardings``
     (same treedef) if given — this is the elastic-restart entry point."""

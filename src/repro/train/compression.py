@@ -20,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def quantize_int8(x: jax.Array, scale: jax.Array):
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -28,7 +30,7 @@ def quantize_int8(x: jax.Array, scale: jax.Array):
 
 def compressed_psum(x: jax.Array, axis: str, resid: jax.Array):
     """int8 all-reduce with error feedback. Returns (mean, new_resid)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     xf = x.astype(jnp.float32) + resid
     amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis)
     scale = jnp.maximum(amax, 1e-30) / 127.0
@@ -52,7 +54,7 @@ def tree_compressed_psum(grads, resid, *, pod_axis: str = "pod",
             return compressed_psum(g, pod_axis, r)
         m = (
             jax.lax.psum(g.astype(jnp.float32), pod_axis)
-            / jax.lax.axis_size(pod_axis)
+            / compat.axis_size(pod_axis)
         ).astype(g.dtype)
         return m, r
 
@@ -86,7 +88,7 @@ def make_compressed_grads(loss_fn, mesh, *, compress: bool = True,
         return loss, grads, resid
 
     batch_spec = P(pod_axis)
-    return jax.shard_map(
+    return compat.shard_map(
         per_pod, mesh=mesh,
         in_specs=(P(), batch_spec, P()),
         out_specs=(P(), P(), P()),

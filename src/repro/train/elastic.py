@@ -16,7 +16,10 @@ from typing import Callable, Optional
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
+from repro.compat import AxisType
 
 
 def largest_mesh(num_devices: int, axes=("data", "model"),
@@ -38,7 +41,9 @@ def remesh(devices=None, *, axes=("data", "model"), model_parallel: int = 1
     shape = largest_mesh(len(devices), axes, model_parallel)
     n = int(np.prod(shape))
     arr = np.array(devices[:n]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.mesh_from_devices(
+        arr, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
 
 
 def reshard_state(state, shardings):

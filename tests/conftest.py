@@ -4,6 +4,36 @@
 import numpy as np
 import pytest
 
+# Optional test-only dependencies (declared under the ``test`` extra in
+# pyproject.toml). A module importing one of these when it is not
+# installed is reported as a SKIPPED module with a reason — never a
+# collection error that kills the whole suite.
+OPTIONAL_TEST_DEPS = ("hypothesis",)
+
+
+class _OptionalDepModule(pytest.Module):
+    def collect(self):
+        # pytest wraps a module-level ImportError into CollectError; map
+        # the ones caused by a known-optional dependency to a skip.
+        try:
+            return super().collect()
+        except self.CollectError as e:
+            for dep in OPTIONAL_TEST_DEPS:
+                # match the bare module and any submodule ('hypothesis',
+                # 'hypothesis.strategies'), not prefix-named strangers
+                if (f"No module named '{dep}'" in str(e)
+                        or f"No module named '{dep}." in str(e)):
+                    pytest.skip(
+                        f"optional test dependency {dep!r} is not installed "
+                        f"(pip install '.[test]')",
+                        allow_module_level=True,
+                    )
+            raise
+
+
+def pytest_pycollect_makemodule(module_path, parent):
+    return _OptionalDepModule.from_parent(parent, path=module_path)
+
 
 @pytest.fixture
 def rng():

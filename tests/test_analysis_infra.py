@@ -109,14 +109,13 @@ def test_model_flops_train_vs_decode():
 # -- sharding rules -----------------------------------------------------------
 
 def test_spec_for_divisibility_and_fallbacks():
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import AxisType, mesh_from_devices
     from repro.launch.mesh import spec_for, train_rules
 
     devs = np.array(jax.devices() * 256)[:256].reshape(16, 16)
-    from jax.sharding import Mesh
-
-    mesh = Mesh(devs, ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = mesh_from_devices(devs, ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
     rules = train_rules(mesh)
     # heads=24 does not divide 16 -> unsharded; ffn 12288 does
     sp = spec_for((3072, 24, 128), ("embed", "heads", "head_dim"),

@@ -1,0 +1,192 @@
+"""Streaming minibatch pipeline: block store, prefetcher, and the
+StreamingHDP driver (equivalence, bounded memory, kill/resume)."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hdp as H
+from repro.core.sharded import ShardedHDP
+from repro.core.streaming import StreamingHDP
+from repro.data.stream import BlockPrefetcher, ShardedCorpusStore
+from repro.data.synthetic import planted_topics_corpus
+from repro.launch.mesh import make_host_mesh
+
+
+def make_setup(rng, D, impl="sparse", V=48, K=12, doc_len=(10, 20)):
+    corpus, _ = planted_topics_corpus(rng, D=D, V=V, K_true=3,
+                                      doc_len=doc_len)
+    mesh = make_host_mesh()
+    cfg = H.HDPConfig(K=K, V=V, bucket=K, z_impl=impl, hist_cap=32)
+    return corpus, mesh, cfg, ShardedHDP(mesh, cfg)
+
+
+# -- corpus store -------------------------------------------------------------
+
+def test_store_blocks_partition_corpus(rng):
+    corpus, *_ = make_setup(rng, D=37)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    assert store.num_blocks == 5
+    rows = np.concatenate([b.tokens for b in store.blocks()])
+    msk = np.concatenate([b.mask for b in store.blocks()])
+    assert rows.shape[0] == 5 * 8  # padded final block
+    np.testing.assert_array_equal(rows[:37], corpus.tokens)
+    np.testing.assert_array_equal(msk[:37], corpus.mask)
+    assert not msk[37:].any()  # padding rows carry no tokens
+    assert store.num_tokens == corpus.num_tokens
+
+
+def test_store_doc_multiple_rounds_block_size(rng):
+    corpus, *_ = make_setup(rng, D=20)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=7,
+                                           doc_multiple=4)
+    assert store.block_docs == 8
+
+
+def test_store_save_open_roundtrip(rng):
+    corpus, *_ = make_setup(rng, D=16)
+    with tempfile.TemporaryDirectory() as d:
+        ShardedCorpusStore.from_corpus(corpus, block_docs=4).save(d)
+        store = ShardedCorpusStore.open(d)  # memmap-backed
+        assert store.num_blocks == 4
+        np.testing.assert_array_equal(store.block(1).tokens,
+                                      corpus.tokens[4:8])
+
+
+def test_prefetcher_preserves_order_and_propagates_errors():
+    out = list(BlockPrefetcher(iter(range(10)), lambda x: x * x, depth=2))
+    assert out == [x * x for x in range(10)]
+
+    def boom(x):
+        if x == 3:
+            raise RuntimeError("stage failed")
+        return x
+
+    with pytest.raises(RuntimeError, match="stage failed"):
+        list(BlockPrefetcher(iter(range(10)), boom, depth=2))
+
+
+# -- the tentpole equivalence claim -------------------------------------------
+
+@pytest.mark.parametrize("impl", ["sparse", "dense", "pallas"])
+def test_streaming_single_block_bitwise_equals_monolithic(rng, impl):
+    """A one-block stream must consume randomness — and produce states —
+    bitwise-identically to the monolithic ShardedHDP iteration."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=24, impl=impl)
+    ts, ms = sh.corpus_shardings()
+    tokens = jax.device_put(jnp.asarray(corpus.tokens), ts)
+    mask = jax.device_put(jnp.asarray(corpus.mask), ms)
+    mono = sh.init_state(jax.random.key(0), tokens, mask)
+    step = sh.jit_iteration()
+
+    store = ShardedCorpusStore.from_corpus(corpus, corpus.num_docs)
+    assert store.num_blocks == 1
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+
+    for _ in range(3):
+        mono = step(mono, tokens, mask)
+        st = stream.iteration(st)
+
+    np.testing.assert_array_equal(np.asarray(mono.z), st.z_blocks[0])
+    for f in ("n", "phi", "varphi", "psi", "l"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono, f)), np.asarray(getattr(st, f)), f
+        )
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(mono.key)),
+        np.asarray(jax.random.key_data(st.key)),
+    )
+    assert int(mono.it) == int(st.it) == 3
+
+
+def test_streaming_multiblock_statistics_consistent(rng):
+    """Multi-block sweeps draw different (per-block) uniforms than the
+    monolithic sampler, but the merged statistics must stay exact:
+    n == count(z), token conservation, psi on the simplex."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+    for _ in range(3):
+        st = stream.iteration(st)
+    z_all = jnp.asarray(st.z_blocks.reshape(-1, store.max_len))
+    t_all, m_all = [], []
+    for blk in store.blocks():
+        t_all.append(blk.tokens)
+        m_all.append(blk.mask)
+    n_re = H.count_n(z_all, jnp.asarray(np.concatenate(t_all)),
+                     jnp.asarray(np.concatenate(m_all)), cfg.K, cfg.V)
+    np.testing.assert_array_equal(np.asarray(n_re), np.asarray(st.n))
+    assert int(np.asarray(st.n).sum()) == corpus.num_tokens
+    assert abs(float(st.psi.sum()) - 1.0) < 1e-4
+
+
+def test_streaming_bounded_device_memory(rng):
+    """Corpus 10x the block budget: device-resident bytes stay well under
+    the monolithic corpus footprint."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=320, doc_len=(30, 60))
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=32)
+    assert store.num_blocks >= 10
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+    # monolithic footprint: device tokens + mask + z for the full corpus
+    mono_bytes = (corpus.tokens.nbytes + corpus.mask.nbytes
+                  + corpus.tokens.nbytes)
+    peak = 0
+    for _ in range(2):
+        st = stream.iteration(st)
+        peak = max(peak, sum(a.nbytes for a in jax.live_arrays()))
+    assert peak < mono_bytes / 2, (peak, mono_bytes)
+
+
+def test_streaming_kill_resume_bitwise_deterministic(rng):
+    """Mid-epoch kill + restore from the block-cursor checkpoint replays
+    to exactly the uninterrupted chain."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+
+    a = stream.init_state(jax.random.key(0))
+    for _ in range(4):
+        a = stream.iteration(a)
+
+    with tempfile.TemporaryDirectory() as d:
+        b = stream.init_state(jax.random.key(0))
+        for _ in range(2):
+            b = stream.iteration(b)
+        # killed mid-iteration 3 after 2 of 5 blocks
+        r = stream.iteration(b, ckpt_dir=d, ckpt_every_blocks=1,
+                             stop_after_blocks=2)
+        assert r is None  # sweep did not complete
+        b, resume_kw = stream.restore(d)
+        assert resume_kw["start_block"] == 2
+        b = stream.iteration(b, **resume_kw)
+        b = stream.iteration(b)
+
+    for f in ("n", "phi", "varphi", "psi", "l"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), f
+        )
+    np.testing.assert_array_equal(a.z_blocks, b.z_blocks)
+    assert int(a.it) == int(b.it) == 4
+
+
+def test_streaming_boundary_checkpoint_roundtrip(rng):
+    corpus, mesh, cfg, sh = make_setup(rng, D=24)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(1))
+    st = stream.iteration(st)
+    with tempfile.TemporaryDirectory() as d:
+        stream.save(d, st)
+        restored, resume_kw = stream.restore(d)
+        assert resume_kw == {}
+        for f in ("n", "phi", "varphi", "psi", "l"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st, f)), np.asarray(getattr(restored, f))
+            )
+        np.testing.assert_array_equal(st.z_blocks, restored.z_blocks)

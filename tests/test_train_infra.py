@@ -101,10 +101,13 @@ def test_bigram_learning_beats_unigram_entropy():
     stream = SyntheticLMStream(CFG.vocab_size, 8, 32, seed=4)
     step = jax.jit(make_train_step(CFG, AdamWConfig(lr=3e-3, warmup=5)))
     state = init_train_state(jax.random.key(1), CFG)
-    for i in range(60):
+    losses = []
+    for i in range(120):
         b = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
         state, m = step(state, b)
-    final = float(m["loss"])
+        losses.append(float(m["loss"]))
+    # average the tail: single-step loss bounces by ~0.3 nats
+    final = float(np.mean(losses[-10:]))
     # unigram entropy of the Zipf marginal is the no-learning floor
     h_unigram = -np.sum(stream.p * np.log(stream.p))
     assert final < h_unigram, (final, h_unigram)
