@@ -81,20 +81,80 @@ def stream_bench(args):
             json.dump(results, f, indent=1)
 
 
+def serve_bench(args):
+    """Serving-path throughput: fold-in docs/s and latency percentiles of
+    the continuous-batching engine (serve/engine.py) across slot counts,
+    plus held-out fold-in perplexity of the snapshot — the repo's
+    model-quality number, recorded alongside the perf numbers."""
+    import jax
+    import numpy as np
+
+    from repro.launch import serve_hdp as SH
+    from repro.serve import eval as EV
+    from repro.serve.engine import ServeEngine
+
+    targs = argparse.Namespace(
+        seed=0, eval_docs=16, train_docs=args.train_docs,
+        train_iters=args.train_iters, topics=args.topics,
+        vocab=args.vocab, compact=False, export=None,
+    )
+    snap, heldout = SH.train_tiny_snapshot(targs)
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(0, snap.V, size=int(n)).astype(np.int32)
+            for n in rng.integers(8, 48, size=args.requests)]
+    perplexity = EV.heldout_perplexity(
+        snap, heldout[0], heldout[1], jax.random.key(2),
+        burnin=args.burnin, impl=args.z_impl,
+    )
+    results = []
+    for slots in args.slots:
+        engine = ServeEngine(
+            snap, slots=slots, burnin=args.burnin, impl=args.z_impl,
+            buckets=(32, 64), base_key=jax.random.key(0),
+        )
+        for doc in docs:
+            engine.submit(doc)
+        engine.run()
+        rec = {
+            "mode": "serve", "impl": args.z_impl, "slots": slots,
+            "burnin": args.burnin, "requests": args.requests,
+            "K": snap.K, "V": snap.V, "W": snap.W,
+            "heldout_perplexity": round(perplexity, 3),
+            **engine.stats.summary(),
+        }
+        print(f"slots={slots}: {rec['docs_per_s']} docs/s "
+              f"(p95 {rec['p95_latency_ms']}ms)", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="hdp-pubmed")
-    ap.add_argument("--out", default="perf_hdp.json")
+    ap.add_argument("--out", default="BENCH_hdp.json",
+                    help="stats JSON path (CI uploads this as an artifact)")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--stream", action="store_true",
                     help="benchmark the streaming minibatch driver")
+    ap.add_argument("--serve", action="store_true",
+                    help="benchmark the fold-in serving engine")
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--topics", type=int, default=100)
     ap.add_argument("--z-impl", default="sparse")
     ap.add_argument("--block-docs", type=int, nargs="+",
                     default=[64, 256, 1024])
+    # serving-mode knobs (CPU-sized defaults so CI can run them)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--burnin", type=int, default=8)
+    ap.add_argument("--slots", type=int, nargs="+", default=[4, 16])
+    ap.add_argument("--train-docs", type=int, default=64)
+    ap.add_argument("--train-iters", type=int, default=15)
+    ap.add_argument("--vocab", type=int, default=64)
     args = ap.parse_args()
+    if args.serve:
+        return serve_bench(args)
     if args.stream:
         return stream_bench(args)
 

@@ -30,6 +30,8 @@ and continues from the cursor block.
 from __future__ import annotations
 
 import functools
+import os
+import re
 from typing import NamedTuple, Optional
 
 import jax
@@ -42,6 +44,79 @@ from repro.core.sharded import ShardedHDP
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
 from repro.data.stream import BlockPrefetcher, ShardedCorpusStore
 from repro.train import checkpoint as CKPT
+
+
+class ZBlockStore:
+    """Per-block versioned z-slab files: incremental mid-epoch saves.
+
+    Serializing the full ``z_blocks`` array every checkpoint cadence is
+    O(corpus) I/O; between two mid-epoch saves only ``ckpt_every_blocks``
+    slabs have actually changed. This store writes each block to its own
+    immutable ``zstore/block_<b>.v<ver>.npy`` file — a new version file
+    per write, never an overwrite, so a crash mid-write can only corrupt
+    a file no committed manifest references. The checkpoint payload then
+    carries just the (B,) version vector; restore loads each block at
+    its recorded version.
+
+    Staleness is tracked by content *stamps* (monotone counters bumped
+    by the driver after each block sweep): ``sync`` rewrites exactly the
+    blocks whose in-memory stamp differs from the stamp last written to
+    THIS store, so alternating save dirs stay individually consistent.
+    Version files referenced by no retained checkpoint are garbage
+    collected after each successful save.
+    """
+
+    _FILE_RE = re.compile(r"^block_(\d+)\.v(\d+)\.npy$")
+
+    def __init__(self, ckpt_dir: str, num_blocks: int):
+        self.dir = os.path.join(ckpt_dir, "zstore")
+        os.makedirs(self.dir, exist_ok=True)
+        self.versions = np.full(num_blocks, -1, np.int64)
+        self.written_stamp = np.full(num_blocks, -1, np.int64)
+        vers = [int(m.group(2)) for m in
+                (self._FILE_RE.match(f) for f in os.listdir(self.dir)) if m]
+        self._next_ver = max(vers, default=-1) + 1
+
+    def _path(self, b: int, ver: int) -> str:
+        return os.path.join(self.dir, f"block_{b}.v{ver}.npy")
+
+    def sync(self, z_blocks: np.ndarray, stamps: np.ndarray) -> tuple:
+        """Write blocks whose content stamp moved since the last sync to
+        this store; returns (version vector, blocks written)."""
+        ver = self._next_ver
+        wrote = 0
+        for b in range(len(self.versions)):
+            if self.versions[b] >= 0 and self.written_stamp[b] == stamps[b]:
+                continue
+            np.save(self._path(b, ver), z_blocks[b])
+            self.versions[b] = ver
+            self.written_stamp[b] = stamps[b]
+            wrote += 1
+        if wrote:
+            self._next_ver = ver + 1
+        return self.versions.copy(), wrote
+
+    def load(self, versions: np.ndarray) -> np.ndarray:
+        blocks = [np.load(self._path(b, int(v)))
+                  for b, v in enumerate(versions)]
+        return np.stack(blocks).astype(np.int32)
+
+    def mark_loaded(self, versions: np.ndarray, stamps: np.ndarray):
+        """After a restore: disk content at ``versions`` IS the current
+        in-memory content (stamps), so nothing is dirty."""
+        self.versions = np.asarray(versions, np.int64).copy()
+        self.written_stamp = np.asarray(stamps, np.int64).copy()
+
+    def gc(self, referenced: set):
+        """Delete version files not referenced by any retained
+        checkpoint manifest. ``referenced``: set of (block, version)."""
+        for f in os.listdir(self.dir):
+            m = self._FILE_RE.match(f)
+            if m and (int(m.group(1)), int(m.group(2))) not in referenced:
+                try:
+                    os.remove(os.path.join(self.dir, f))
+                except OSError:
+                    pass
 
 
 class StreamingState(NamedTuple):
@@ -84,6 +159,24 @@ class StreamingHDP:
                 lambda l: (l, sample_psi(k_psi, l, cfg.gamma))
             )(sample_l(k_l, dh, psi, cfg.alpha))
         )
+        # content stamps for incremental z checkpointing: bumped after
+        # every in-place slab update; each ZBlockStore compares them to
+        # what it last wrote (per save dir).
+        self._z_stamp = np.zeros(store.num_blocks, np.int64)
+        self._stamp_counter = 0
+        self._zstores: dict[str, ZBlockStore] = {}
+
+    def _touch_z(self, b: int):
+        self._stamp_counter += 1
+        self._z_stamp[b] = self._stamp_counter
+
+    def _zstore(self, ckpt_dir: str) -> ZBlockStore:
+        zs = self._zstores.get(ckpt_dir)
+        if zs is None:
+            zs = self._zstores[ckpt_dir] = ZBlockStore(
+                ckpt_dir, self.store.num_blocks
+            )
+        return zs
 
     # -- init --------------------------------------------------------------
     def init_state(self, key: jax.Array) -> StreamingState:
@@ -107,6 +200,8 @@ class StreamingHDP:
         z_blocks = np.zeros(
             (store.num_blocks, store.block_docs, store.max_len), np.int32
         )
+        for b in range(store.num_blocks):
+            self._touch_z(b)  # fresh content: every slab is save-dirty
         return StreamingState(
             n=jax.device_put(n, self._n_sh),
             phi=jax.device_put(phi, self._n_sh),
@@ -195,6 +290,7 @@ class StreamingHDP:
                 n_acc = n_acc + n_c
                 dh_acc = dh_acc + dh_c
                 z_blocks[b] = np.asarray(z_b)
+                self._touch_z(b)
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
@@ -231,18 +327,39 @@ class StreamingHDP:
                 self.save(ckpt_dir, state)
         return state
 
+    # -- snapshot export ---------------------------------------------------
+    def export_snapshot(self, path: str, state: StreamingState, *,
+                        w: Optional[int] = None, compact: bool = False):
+        """Distill the current model into a serving snapshot
+        (serve/snapshot.py): Phi/Psi plus the word-sparse alias tables
+        built once, valid for the snapshot's lifetime because serving
+        never resamples Phi."""
+        from repro.serve import snapshot as SNAP
+
+        snap = SNAP.snapshot_from_state(state, self.cfg, w=w, compact=compact)
+        SNAP.save(path, snap)
+        return snap
+
     # -- checkpointing ----------------------------------------------------
     # One logical "step" per saved payload: step = it * B + cursor, so
     # mid-epoch checkpoints order correctly between iteration boundaries.
+    # z slabs do NOT live in the payload: they go to the per-block
+    # ZBlockStore (only blocks touched since the last save are written)
+    # and the payload records the (B,) version vector + block geometry.
 
-    def _payload(self, state: StreamingState, cursor: int, n_acc, dh_acc):
+    def _payload(self, state: StreamingState, cursor: int, n_acc, dh_acc,
+                 z_versions: np.ndarray):
+        store = self.store
         return {
             "model": {
                 "n": state.n, "phi": state.phi, "varphi": state.varphi,
                 "psi": state.psi, "l": state.l, "key": state.key,
                 "it": state.it,
             },
-            "z_blocks": state.z_blocks,
+            "z_versions": np.asarray(z_versions, np.int64),
+            "z_shape": np.asarray(
+                [store.num_blocks, store.block_docs, store.max_len], np.int64
+            ),
             "cursor": np.int64(cursor),
             "n_acc": n_acc,
             "dh_acc": dh_acc,
@@ -250,8 +367,6 @@ class StreamingHDP:
 
     def _template(self):
         cfg, store = self.cfg, self.store
-        z = np.zeros((store.num_blocks, store.block_docs, store.max_len),
-                     np.int32)
         return {
             "model": {
                 "n": jnp.zeros((cfg.K, cfg.V), jnp.int32),
@@ -262,41 +377,80 @@ class StreamingHDP:
                 "key": jax.random.key(0),
                 "it": jnp.int32(0),
             },
-            "z_blocks": z,
+            "z_versions": np.zeros((store.num_blocks,), np.int64),
+            "z_shape": np.zeros((3,), np.int64),
             "cursor": np.int64(0),
             "n_acc": jnp.zeros((cfg.K, cfg.V), jnp.int32),
             "dh_acc": jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
         }
 
+    def _save(self, ckpt_dir, state, cursor, n_acc, dh_acc) -> str:
+        """Incremental save: dirty z slabs first (new immutable version
+        files), then the atomic payload commit that references them,
+        then GC of versions no retained checkpoint references. A crash
+        between the first two steps leaves only orphan version files —
+        the previous checkpoint stays fully consistent."""
+        zs = self._zstore(ckpt_dir)
+        versions, _ = zs.sync(state.z_blocks, self._z_stamp)
+        step = int(state.it) * self.store.num_blocks + cursor
+        path = CKPT.save(ckpt_dir, step,
+                         self._payload(state, cursor, n_acc, dh_acc, versions))
+        referenced = set()
+        for s in CKPT.all_steps(ckpt_dir):
+            if "z_versions" in CKPT.manifest_keys(ckpt_dir, s):
+                referenced |= {
+                    (b, int(v)) for b, v in
+                    enumerate(CKPT.load_array(ckpt_dir, s, "z_versions"))
+                }
+        zs.gc(referenced)
+        return path
+
     def save(self, ckpt_dir: str, state: StreamingState) -> str:
         """Iteration-boundary checkpoint (cursor = 0)."""
         zero_n = jnp.zeros((self.cfg.K, self.cfg.V), jnp.int32)
         zero_dh = jnp.zeros((self.cfg.K, self.cfg.hist_cap + 1), jnp.int32)
-        step = int(state.it) * self.store.num_blocks
-        return CKPT.save(ckpt_dir, step,
-                         self._payload(state, 0, zero_n, zero_dh))
+        return self._save(ckpt_dir, state, 0, zero_n, zero_dh)
 
     def _save_partial(self, ckpt_dir, state, cursor, n_acc, dh_acc):
-        step = int(state.it) * self.store.num_blocks + cursor
-        return CKPT.save(ckpt_dir, step,
-                         self._payload(state, cursor, n_acc, dh_acc))
+        return self._save(ckpt_dir, state, cursor, n_acc, dh_acc)
 
     def restore(self, ckpt_dir: str):
         """Returns (state, resume_kwargs): pass resume_kwargs to
         ``iteration`` to finish a partially-swept epoch (empty dict when
         the checkpoint is at an iteration boundary)."""
+        step = CKPT.latest_step(ckpt_dir)
+        if step is None:
+            return None, {}
+        # legacy format guard: payloads written before the incremental
+        # ZBlockStore embed the full z_blocks array and lack z_versions —
+        # fail with a migration hint instead of a KeyError mid-restore.
+        if "z_versions" not in CKPT.manifest_keys(ckpt_dir, step):
+            raise ValueError(
+                f"checkpoint step_{step} in {ckpt_dir!r} predates the "
+                "incremental z-block format (it embeds z_blocks). "
+                "Finish that run with the repo revision that wrote it, "
+                "save a fresh checkpoint, or restart training."
+            )
         payload = CKPT.restore_latest(ckpt_dir, self._template())
         if payload is None:
             return None, {}
         store = self.store
         want = (store.num_blocks, store.block_docs, store.max_len)
-        got = tuple(np.asarray(payload["z_blocks"]).shape)
+        got = tuple(int(x) for x in np.asarray(payload["z_shape"]))
         if got != want:
             raise ValueError(
                 f"checkpoint block geometry {got} does not match the store "
                 f"{want} — resume with the block_docs/corpus the checkpoint "
                 f"was written with"
             )
+        versions = np.asarray(payload["z_versions"], np.int64)
+        zs = self._zstore(ckpt_dir)
+        z_blocks = zs.load(versions)
+        # the loaded content IS the new in-memory content: restamp every
+        # slab and record this store as in sync with those stamps.
+        for b in range(store.num_blocks):
+            self._touch_z(b)
+        zs.mark_loaded(versions, self._z_stamp)
         m = payload["model"]
         state = StreamingState(
             n=jax.device_put(m["n"], self._n_sh),
@@ -305,9 +459,7 @@ class StreamingHDP:
             psi=jax.device_put(m["psi"], self._repl_sh),
             l=jax.device_put(m["l"], self._repl_sh),
             key=m["key"], it=m["it"],
-            # np.array (not asarray): restored arrays are read-only views
-            # and the sweep writes z slabs in place.
-            z_blocks=np.array(payload["z_blocks"], np.int32),
+            z_blocks=z_blocks,
         )
         cursor = int(payload["cursor"])
         if cursor == 0:

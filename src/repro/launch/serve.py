@@ -74,7 +74,10 @@ def serve(args):
             logits, cache = prefill_fn(params, jnp.asarray(toks), embeds)
             logits.block_until_ready()
             t_pre += time.time() - t0
-            stats["prefill_tokens"] += toks.size
+            # count real requests only: toks.size includes the duplicated
+            # padding rows of a partial batch, which would inflate the
+            # reported prefill tok/s (decode stats already count len(reqs)).
+            stats["prefill_tokens"] += args.prompt_len * len(reqs)
 
             generated = []
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)

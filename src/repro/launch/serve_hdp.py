@@ -1,0 +1,197 @@
+"""HDP topic-inference serving driver: snapshot -> engine -> stats.
+
+Loads (or, with --smoke/--train-iters, trains and exports) a frozen
+``ModelSnapshot``, runs a query workload through the continuous-batching
+engine, and reports docs/s, latency percentiles, and held-out fold-in
+perplexity as JSON — the serving counterpart of launch/train.py.
+
+  # end-to-end from nothing (tiny model, 16 queries):
+  PYTHONPATH=src python -m repro.launch.serve_hdp --smoke
+
+  # serve an exported snapshot against a synthetic AP-like workload:
+  PYTHONPATH=src python -m repro.launch.serve_hdp \
+      --snapshot /tmp/snap --corpus ap --scale 0.01 --requests 256 \
+      --slots 32 --burnin 16 --impl sparse
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import eval as EV
+from repro.serve import snapshot as SNAP
+from repro.serve.engine import DEFAULT_BUCKETS, ServeEngine
+
+
+def train_tiny_snapshot(args):
+    """Fit a small model on a planted-topic corpus and export it —
+    the from-scratch path for --smoke and CI. A quarter of the corpus is
+    held out of training and returned as the perplexity eval batch
+    (held-out docs must come from the modeled distribution for the
+    metric to mean anything)."""
+    from repro.core import hdp as H
+    from repro.data.synthetic import planted_topics_corpus
+
+    rng = np.random.default_rng(args.seed)
+    n_eval = max(args.eval_docs, 1)
+    corpus, _ = planted_topics_corpus(
+        rng, D=args.train_docs + n_eval, V=args.vocab, K_true=3,
+        doc_len=(10, 24)
+    )
+    cfg = H.HDPConfig(K=args.topics, V=corpus.V, bucket=args.topics,
+                      z_impl="sparse", hist_cap=64)
+    tokens = jnp.asarray(corpus.tokens[:args.train_docs])
+    mask = jnp.asarray(corpus.mask[:args.train_docs])
+    state = H.init_state(jax.random.key(args.seed), tokens, mask, cfg)
+    step = jax.jit(lambda s: H.gibbs_iteration(s, tokens, mask, cfg))
+    for _ in range(args.train_iters):
+        state = step(state)
+    snap = SNAP.snapshot_from_state(state, cfg, compact=args.compact)
+    if args.export:
+        SNAP.save(args.export, snap)
+        print(f"exported snapshot (it={int(snap.it)}) to {args.export}")
+    heldout = (corpus.tokens[args.train_docs:], corpus.mask[args.train_docs:])
+    return snap, heldout
+
+
+def make_workload(args, snap: SNAP.ModelSnapshot, heldout):
+    """Variable-length query documents + a held-out eval batch. Queries
+    come from a corpus replica (--corpus) or are synthetic; the eval
+    batch prefers genuinely held-out docs (from-scratch training path or
+    --corpus tail), falling back to synthetic ones (a loaded snapshot
+    with a synthetic workload — throughput-only, perplexity is then a
+    number against noise)."""
+    rng = np.random.default_rng(args.seed + 1)
+    n_eval = max(args.eval_docs, 1)
+    if args.corpus:
+        from repro.data.synthetic import paper_corpus
+
+        corpus = paper_corpus(args.corpus, rng, scale=args.scale,
+                              max_len=max(DEFAULT_BUCKETS))
+        docs = [corpus.tokens[i][corpus.mask[i]] % snap.V
+                for i in range(min(args.requests, corpus.num_docs))]
+        if heldout is None and corpus.num_docs > args.requests:
+            tail = slice(args.requests, args.requests + n_eval)
+            heldout = (corpus.tokens[tail] % snap.V, corpus.mask[tail])
+    else:
+        lengths = rng.integers(args.min_len, args.max_len + 1,
+                               size=args.requests)
+        docs = [rng.integers(0, snap.V, size=int(n)).astype(np.int32)
+                for n in lengths]
+    if heldout is not None:
+        ev_tokens, ev_mask = heldout
+    else:
+        # uniform-random eval docs: perplexity becomes a score against
+        # noise (harmless for throughput runs; flagged in the output)
+        elen = max(args.max_len, 16)
+        ev_tokens = np.zeros((n_eval, elen), np.int32)
+        ev_mask = np.zeros((n_eval, elen), bool)
+        for i in range(n_eval):
+            n = int(rng.integers(8, elen + 1))
+            ev_tokens[i, :n] = rng.integers(0, snap.V, size=n)
+            ev_mask[i, :n] = True
+    return docs, np.asarray(ev_tokens), np.asarray(ev_mask), heldout is None
+
+
+def serve(args) -> dict:
+    heldout = None
+    if args.snapshot and not args.smoke and not args.train_iters:
+        snap = SNAP.load(args.snapshot)
+    else:
+        snap, heldout = train_tiny_snapshot(args)
+    print(f"snapshot: K={snap.K} V={snap.V} W={snap.W} "
+          f"compact={snap.compact} ({snap.nbytes()/1e6:.2f} MB)")
+
+    docs, ev_tokens, ev_mask, ev_synth = make_workload(args, snap, heldout)
+    engine = ServeEngine(
+        snap, slots=args.slots, burnin=args.burnin, impl=args.impl,
+        buckets=tuple(args.buckets), base_key=jax.random.key(args.seed),
+    )
+    rids = [engine.submit(doc) for doc in docs]
+    mixtures = engine.run()
+
+    # every accepted request must come back as a valid mixture
+    assert len(mixtures) == len(rids), (len(mixtures), len(rids))
+    for rid in rids:
+        th = mixtures[rid]
+        assert th.shape == (snap.K,) and np.all(th >= 0), rid
+        assert abs(float(th.sum()) - 1.0) < 1e-4, rid
+
+    t0 = time.time()
+    perplexity = EV.heldout_perplexity(
+        snap, ev_tokens, ev_mask, jax.random.key(args.seed + 2),
+        burnin=args.burnin, impl=args.impl,
+    )
+    eval_s = time.time() - t0
+
+    out = {
+        "mode": "serve_hdp",
+        "impl": args.impl,
+        "snapshot": {"K": snap.K, "V": snap.V, "W": snap.W,
+                     "compact": snap.compact, "it": int(snap.it),
+                     "mbytes": round(snap.nbytes() / 1e6, 3)},
+        "requests": len(rids),
+        "burnin": args.burnin,
+        "slots": args.slots,
+        **engine.stats.summary(),
+        "heldout_perplexity": round(perplexity, 3),
+        # True when no genuinely held-out docs were available and the
+        # eval batch is uniform noise — the perplexity is then only a
+        # smoke number, not a model-quality metric.
+        "eval_synthetic": ev_synth,
+        "eval_docs": ev_tokens.shape[0],
+        "eval_s": round(eval_s, 2),
+        "sample_mixture_top3": sorted(
+            np.asarray(mixtures[rids[0]]).tolist(), reverse=True
+        )[:3],
+    }
+    print(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshot", default=None,
+                    help="snapshot dir to load (serve/snapshot.py)")
+    ap.add_argument("--export", default=None,
+                    help="export the freshly trained snapshot here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end run: train, export, serve, eval")
+    ap.add_argument("--impl", default="sparse",
+                    choices=["dense", "sparse", "pallas"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--burnin", type=int, default=8)
+    ap.add_argument("--buckets", type=int, nargs="+",
+                    default=list(DEFAULT_BUCKETS))
+    ap.add_argument("--corpus", default=None,
+                    help="ap|cgcbib|neurips|pubmed synthetic query workload")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--min-len", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--eval-docs", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compact", action="store_true",
+                    help="bf16/int16 snapshot tables")
+    # training knobs for --smoke / from-scratch export
+    ap.add_argument("--train-iters", type=int, default=0)
+    ap.add_argument("--train-docs", type=int, default=64)
+    ap.add_argument("--topics", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=64)
+    args = ap.parse_args()
+    if args.smoke and not args.train_iters:
+        args.train_iters = 20
+    if not args.snapshot and not args.train_iters:
+        ap.error("need --snapshot, --smoke, or --train-iters")
+    serve(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Query-inference serving for frozen HDP models.
+
+The training side of the repo (core/, kernels/) produces posterior
+samples of (Phi, Psi); this package turns one such sample into a
+deployable artifact and answers topic-inference queries against it:
+
+  * ``snapshot``  — distill a training state into an immutable
+                    ``ModelSnapshot`` (Phi, Psi + the once-per-snapshot
+                    word-sparse alias tables) with save/load;
+  * ``foldin``    — frozen-Phi fold-in Gibbs: the z-step with only the
+                    document-side statistic live, returning per-document
+                    topic mixtures (dense/sparse/pallas, bitwise-equal);
+  * ``engine``    — continuous-batching request engine over fixed-shape
+                    length-bucketed slots;
+  * ``eval``      — held-out document-completion perplexity.
+
+The partial collapsing of the source paper is what makes this layer
+cheap: with Phi and Psi frozen the per-word alias tables are exact and
+never rebuilt (unlike resampled-table LDA schemes, which need an MH
+correction), so query inference is pure O(min(K_d, K_v)) sampling per
+token against read-only tables.
+"""
+
+from repro.serve.snapshot import ModelSnapshot, build_snapshot  # noqa: F401

@@ -1,0 +1,290 @@
+"""Continuous-batching engine for fold-in queries.
+
+Variable-length query documents are packed into fixed-shape (B, L)
+batches so XLA compiles a handful of programs (one per length bucket)
+instead of one per request shape:
+
+  * each length bucket owns a pool of B *slots*; a slot holds one
+    in-flight document for the ``init + burnin`` sweeps it needs;
+  * every engine step runs ONE frozen-Phi Gibbs sweep over a bucket's
+    whole slot batch — documents admitted at different times coexist in
+    one batch at different sweep counts (iteration-level continuous
+    batching, the topic-model analogue of an LLM decode step);
+  * a document that reaches ``burnin`` sweeps retires (its topic mixture
+    is read out) and frees its slot, which the next queued request takes
+    on the following step.
+
+Correctness invariant: a document's mixture depends only on
+(snapshot, base_key, its seed, its tokens) — the fold-in randomness
+contract of serve/foldin.py — never on the slot index, the batch
+composition, or admission timing. ``tests/test_serve.py`` asserts
+engine output is bitwise-equal to a direct ``foldin_docs`` call.
+
+The per-step device work is one z-sweep over (B, L) read-only tables;
+empty slots carry all-False masks and are skipped by the sweep's
+``live`` guard at zero cost beyond lane occupancy.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conformance as C
+from repro.serve import foldin as F
+from repro.serve.snapshot import ModelSnapshot
+
+DEFAULT_BUCKETS = (32, 64, 128, 256)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "has_fresh"))
+def _engine_step(snap, tokens, mask, z, seeds, sweeps, base_key, *,
+                 impl, has_fresh):
+    """One engine step on a (B, L) slot batch: initialize fresh slots
+    (sweeps == 0) from the global term, then run one frozen z-sweep with
+    each slot's own sweep-indexed uniforms.
+
+    ``has_fresh`` is static (the host knows whether admission placed
+    anything): the steady-state no-admissions variant skips the init
+    uniforms + alias pass entirely instead of computing and discarding
+    them every step.
+    """
+    length = tokens.shape[1]
+    if has_fresh:
+        u0 = F.sweep_uniforms(base_key, seeds, jnp.zeros_like(seeds), length)
+        z_init = F.init_z(tokens, mask, u0, snap.fpack, snap.ipack)
+        z = jnp.where((sweeps == 0)[:, None], z_init, z)
+    u = F.sweep_uniforms(base_key, seeds, sweeps + 1, length)
+    return C.z_step_conformant(
+        impl, tokens, mask, z, u, snap.q_a, snap.fpack, snap.ipack,
+        kk=snap.K,
+    )
+
+
+@dataclass
+class _Slots:
+    """One length bucket's slot pool. tokens/mask/seeds are host staging
+    arrays, re-uploaded to their device twins ONLY when admission writes
+    them (``dirty``); z lives device-resident for the pool's whole life
+    (fresh slots are re-initialized in-kernel via the sweeps==0 path, so
+    stale rows never need host zeroing) — the steady-state step transfers
+    just the (B,) sweep counters."""
+    length: int
+    tokens: np.ndarray                    # (B, L) int32, host staging
+    mask: np.ndarray                      # (B, L) bool, host staging
+    seeds: np.ndarray                     # (B,) int32, host staging
+    sweeps: np.ndarray                    # (B,) int32
+    req: list                             # (B,) Optional[request id]
+    z: jax.Array                          # (B, L) int32, device-resident
+    d_tokens: Optional[jax.Array] = None  # device twins (None = dirty)
+    d_mask: Optional[jax.Array] = None
+    d_seeds: Optional[jax.Array] = None
+    steps: int = 0
+
+    @classmethod
+    def empty(cls, batch: int, length: int) -> "_Slots":
+        return cls(
+            length=length,
+            tokens=np.zeros((batch, length), np.int32),
+            mask=np.zeros((batch, length), bool),
+            seeds=np.zeros((batch,), np.int32),
+            sweeps=np.zeros((batch,), np.int32),
+            req=[None] * batch,
+            z=jnp.zeros((batch, length), jnp.int32),
+        )
+
+    def mark_dirty(self):
+        self.d_tokens = self.d_mask = self.d_seeds = None
+
+    def device_batch(self):
+        if self.d_tokens is None:
+            self.d_tokens = jnp.asarray(self.tokens)
+            self.d_mask = jnp.asarray(self.mask)
+            self.d_seeds = jnp.asarray(self.seeds)
+        return self.d_tokens, self.d_mask, self.d_seeds
+
+
+@dataclass
+class _Pending:
+    rid: int
+    tokens: Optional[np.ndarray]  # dropped at admission (slot holds a copy)
+    submit_t: float
+
+
+@dataclass
+class EngineStats:
+    completed: int = 0
+    steps: int = 0
+    wall_s: float = 0.0
+    latencies_s: list = field(default_factory=list)
+    shapes: set = field(default_factory=set)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_s) * 1e3
+        return {
+            "completed": self.completed,
+            "steps": self.steps,
+            "docs_per_s": round(self.completed / max(self.wall_s, 1e-9), 2),
+            "p50_latency_ms": round(float(np.percentile(lat, 50)), 2)
+            if len(lat) else None,
+            "p95_latency_ms": round(float(np.percentile(lat, 95)), 2)
+            if len(lat) else None,
+            "compiled_shapes": sorted(self.shapes),
+        }
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a frozen ``ModelSnapshot``.
+
+    ``submit`` enqueues documents; ``run`` drives steps until the queue
+    drains and returns {request id: (K,) mixture}. Documents longer than
+    the largest bucket are truncated to it (fold-in over a prefix — the
+    mixture estimate simply sees fewer tokens).
+    """
+
+    def __init__(
+        self, snap: ModelSnapshot, *, slots: int = 8, burnin: int = 16,
+        impl: str = "sparse", buckets: Sequence[int] = DEFAULT_BUCKETS,
+        base_key: Optional[jax.Array] = None,
+    ):
+        if slots <= 0:
+            raise ValueError("slots must be positive")
+        if burnin < 1:
+            # the engine's step loop always runs >= 1 sweep before a doc
+            # can retire; burnin=0 would silently diverge from
+            # foldin_docs(burnin=0) (init only) and break the documented
+            # bitwise engine == direct-fold-in invariant.
+            raise ValueError("burnin must be >= 1")
+        self.snap = snap
+        self.slots = slots
+        self.burnin = burnin
+        self.impl = impl
+        self.buckets = tuple(sorted(buckets))
+        self.base_key = (jax.random.key(0) if base_key is None else base_key)
+        self._pools: dict[int, _Slots] = {}
+        self._queue: dict[int, list[_Pending]] = {b: [] for b in self.buckets}
+        self._reqs: dict[int, _Pending] = {}       # in-flight only
+        self._completed: dict[int, np.ndarray] = {}  # drained by run()
+        self._next_rid = 0
+        self.stats = EngineStats()
+        self._theta_fn = jax.jit(F.topic_mixture)
+
+    # -- request lifecycle -------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def submit(self, tokens: np.ndarray, *, seed: Optional[int] = None) -> int:
+        """Enqueue one document (1-D int32 word ids). ``seed`` defaults to
+        the request id; it fully determines the fold-in randomness and
+        must be unique per in-flight request (it IS the request id)."""
+        tokens = np.asarray(tokens, np.int32).ravel()
+        if tokens.size == 0:
+            raise ValueError("empty document")
+        rid = self._next_rid if seed is None else seed
+        if rid in self._reqs:
+            raise ValueError(f"seed/request id {rid} already in flight")
+        self._next_rid = max(self._next_rid, rid) + 1
+        p = _Pending(rid=rid, tokens=tokens, submit_t=time.monotonic())
+        self._queue[self._bucket(tokens.size)].append(p)
+        self._reqs[rid] = p
+        return rid
+
+    # -- slot admission / retirement --------------------------------------
+    def _admit(self, pool: _Slots, bucket: int):
+        q = self._queue[bucket]
+        admitted = False
+        for s in range(self.slots):
+            if pool.req[s] is not None or not q:
+                continue
+            p = q.pop(0)
+            n = min(p.tokens.size, bucket)
+            pool.tokens[s] = 0
+            pool.mask[s] = False
+            pool.tokens[s, :n] = p.tokens[:n]
+            pool.mask[s, :n] = True
+            pool.seeds[s] = p.rid
+            pool.sweeps[s] = 0
+            pool.req[s] = p.rid
+            p.tokens = None
+            admitted = True
+        if admitted:
+            pool.mark_dirty()
+
+    def _retire(self, pool: _Slots):
+        done = [s for s in range(self.slots)
+                if pool.req[s] is not None and pool.sweeps[s] >= self.burnin]
+        if not done:
+            return
+        d_mask = pool.device_batch()[1]  # masks the retiring docs saw
+        theta = np.asarray(self._theta_fn(
+            pool.z, d_mask, self.snap.psi, self.snap.alpha,
+        ))
+        now = time.monotonic()
+        for s in done:
+            # evict the request entirely: a long-lived engine must not
+            # accumulate per-request state (tokens, theta) forever.
+            p = self._reqs.pop(pool.req[s])
+            self._completed[p.rid] = theta[s]
+            self.stats.completed += 1
+            self.stats.latencies_s.append(now - p.submit_t)
+            if len(self.stats.latencies_s) > 65536:
+                del self.stats.latencies_s[:32768]
+            pool.req[s] = None
+            pool.mask[s] = False
+        # host masks changed (freed rows go inert); the device twin is
+        # refreshed lazily at the next upload — stale True rows only cost
+        # wasted sweep lanes, never correctness (they are re-initialized
+        # in-kernel when a new request takes the slot).
+
+    # -- the step loop -----------------------------------------------------
+    def step(self) -> bool:
+        """Admit, sweep every bucket with in-flight work, retire.
+        Returns False when nothing is in flight and the queue is empty."""
+        busy = False
+        for bucket in self.buckets:
+            if self._queue[bucket] and bucket not in self._pools:
+                self._pools[bucket] = _Slots.empty(self.slots, bucket)
+            pool = self._pools.get(bucket)
+            if pool is None:
+                continue
+            self._admit(pool, bucket)
+            active = any(r is not None for r in pool.req)
+            if not active:
+                continue
+            busy = True
+            has_fresh = any(r is not None and pool.sweeps[s] == 0
+                            for s, r in enumerate(pool.req))
+            d_tokens, d_mask, d_seeds = pool.device_batch()
+            pool.z = _engine_step(
+                self.snap, d_tokens, d_mask, pool.z, d_seeds,
+                jnp.asarray(pool.sweeps), self.base_key, impl=self.impl,
+                has_fresh=has_fresh,
+            )
+            live = np.array([r is not None for r in pool.req])
+            pool.sweeps[live] += 1
+            pool.steps += 1
+            self.stats.steps += 1
+            self.stats.shapes.add((self.slots, bucket))
+            self._retire(pool)
+        return busy or any(self._queue.values())
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive steps until the queue drains; returns {rid: mixture} for
+        requests completed since the previous ``run`` call (completed
+        results are drained, not retained — the engine holds no
+        per-request state after handing a mixture back)."""
+        t0 = time.monotonic()
+        while self.step():
+            pass
+        self.stats.wall_s += time.monotonic() - t0
+        out, self._completed = self._completed, {}
+        return out

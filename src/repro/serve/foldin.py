@@ -1,0 +1,114 @@
+"""Frozen-Phi fold-in Gibbs: topic mixtures for unseen documents.
+
+Query inference under partial collapsing is the training z-step with the
+model side frozen: Phi and Psi (hence the word-sparse alias tables and
+q_a) are snapshot constants, and only the per-document topic histogram
+m_dk evolves over a short burn-in. The sweep reuses the three z-step
+execution strategies of core/conformance.py over the snapshot's
+topic-ordered tables, so dense / sparse / pallas fold-in draws are
+bitwise-identical (tests/test_serve.py).
+
+Randomness contract (shared with serve/engine.py so a document's mixture
+is independent of how the engine batches it): each query document is
+identified by an integer ``seed``; its chain key is
+``fold_in(base_key, seed)``, the z initialization consumes uniforms from
+``fold_in(doc_key, 0)``, and burn-in sweep s (1-based) consumes uniforms
+from ``fold_in(doc_key, s)``. Nothing depends on the batch shape, the
+slot index, or the company a document keeps.
+
+z is initialized from the word tables' global term alone (k ~ phi[k,v]
+alpha psi_k via one alias draw per token) — the document prior before
+any doc-side evidence, and identical across execution strategies because
+it reads only the shared tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conformance as C
+from repro.core import hdp as H
+from repro.serve.snapshot import ModelSnapshot
+
+
+def doc_key(base_key: jax.Array, seed: jax.Array) -> jax.Array:
+    return jax.random.fold_in(base_key, seed)
+
+
+def sweep_uniforms(
+    base_key: jax.Array, seeds: jax.Array, sweep_ids: jax.Array, length: int,
+) -> jax.Array:
+    """(D, L, 3) uniforms for one sweep; row d is a pure function of
+    (base_key, seeds[d], sweep_ids[d]) — never of d itself."""
+
+    def one(seed, s):
+        return jax.random.uniform(
+            jax.random.fold_in(doc_key(base_key, seed), s), (length, 3)
+        )
+
+    return jax.vmap(one)(seeds, sweep_ids)
+
+
+def init_z(
+    tokens: jax.Array, mask: jax.Array, uniforms: jax.Array,
+    fpack: jax.Array, ipack: jax.Array,
+) -> jax.Array:
+    """Initial assignments from the global term: one alias draw per token
+    over its word's W slots (uniforms columns 1 and 2, matching the
+    global-branch columns of the sweep)."""
+    w = fpack.shape[-1]
+    aprob = fpack[tokens, 1, :].astype(jnp.float32)   # (D, L, W)
+    ids = ipack[tokens, 0, :].astype(jnp.int32)
+    aalias = ipack[tokens, 1, :].astype(jnp.int32)
+    u2, u3 = uniforms[..., 1], uniforms[..., 2]
+    slot = jnp.minimum((u2 * w).astype(jnp.int32), w - 1)
+    keep = u3 < jnp.take_along_axis(aprob, slot[..., None], -1)[..., 0]
+    slot = jnp.where(keep, slot,
+                     jnp.take_along_axis(aalias, slot[..., None], -1)[..., 0])
+    z0 = jnp.take_along_axis(ids, slot[..., None], -1)[..., 0]
+    return jnp.where(mask, z0, 0).astype(jnp.int32)
+
+
+def topic_mixture(
+    z: jax.Array, mask: jax.Array, psi: jax.Array, alpha: jax.Array,
+) -> jax.Array:
+    """Posterior-mean document mixture theta_d ∝ m_dk + alpha psi_k."""
+    k = psi.shape[0]
+    m = H.doc_topic_counts(z, mask, k).astype(jnp.float32)
+    theta = m + alpha * psi[None, :]
+    return theta / jnp.sum(theta, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "burnin", "return_z"))
+def foldin_docs(
+    snap: ModelSnapshot, tokens: jax.Array, mask: jax.Array,
+    seeds: jax.Array, base_key: jax.Array, *,
+    burnin: int = 16, impl: str = "sparse", return_z: bool = False,
+):
+    """Fold a (D, L) batch of unseen documents into the frozen model.
+
+    Returns (D, K) topic mixtures (rows on the simplex); with
+    ``return_z`` also the final assignments, which the conformance tests
+    compare bitwise across impls.
+    """
+    length = tokens.shape[1]
+    u0 = sweep_uniforms(base_key, seeds, jnp.zeros_like(seeds), length)
+    z = init_z(tokens, mask, u0, snap.fpack, snap.ipack)
+
+    def one_sweep(s, z):
+        # s is a traced sweep index — the program contains ONE sweep body
+        # regardless of burnin (compile time does not scale with it).
+        u = sweep_uniforms(
+            base_key, seeds, jnp.broadcast_to(s, seeds.shape), length
+        )
+        return C.z_step_conformant(
+            impl, tokens, mask, z, u, snap.q_a, snap.fpack, snap.ipack,
+            kk=snap.K,
+        )
+
+    z = jax.lax.fori_loop(1, burnin + 1, one_sweep, z)
+    theta = topic_mixture(z, mask, snap.psi, snap.alpha)
+    return (theta, z) if return_z else theta

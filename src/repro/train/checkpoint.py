@@ -105,6 +105,61 @@ def restore_latest(ckpt_dir: str, template, shardings=None):
     return restore(ckpt_dir, step, template, shardings)
 
 
+def _decode(meta: dict, raw: np.ndarray):
+    """Single decoder for the manifest's stored-dtype encodings, shared
+    by restore() and restore_flat() so new encodings cannot drift apart.
+    Returns (array, is_key_data)."""
+    import jax.numpy as jnp
+
+    if meta["dtype"] == "bfloat16":
+        return jnp.asarray(raw.view(jnp.bfloat16)), False
+    if meta["dtype"] == "key_data":
+        return raw, True
+    return raw, False
+
+
+def manifest_keys(ckpt_dir: str, step: int) -> list[str]:
+    """Flat array keys stored in one checkpoint — format introspection
+    without loading anything (e.g. the streaming driver's legacy-format
+    guard). Keeps the manifest schema private to this module."""
+    path = os.path.join(ckpt_dir, f"step_{step}", "manifest.json")
+    with open(path) as f:
+        return list(json.load(f)["arrays"].keys())
+
+
+def load_array(ckpt_dir: str, step: int, key: str) -> np.ndarray:
+    """Load a single stored array by flat key (layout-private accessor;
+    much lighter than restore_flat when one small array is needed, e.g.
+    per-checkpoint z version vectors during GC)."""
+    path = os.path.join(ckpt_dir, f"step_{step}",
+                        key.replace("/", "__") + ".npy")
+    return np.load(path)
+
+
+def restore_flat(ckpt_dir: str, step: Optional[int] = None) -> dict[str, Any]:
+    """Rebuild a checkpoint as a flat {key: array} dict straight from the
+    manifest — no template pytree required. This is the entry point for
+    consumers that define their own container around the stored arrays
+    (e.g. serve/snapshot.py, whose ModelSnapshot is reconstructed from
+    array shapes/dtypes alone). ``step`` defaults to the latest."""
+    import jax.numpy as jnp
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["arrays"]
+    out = {}
+    for key, meta in manifest.items():
+        raw = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
+        arr, is_key = _decode(meta, raw)
+        out[key] = (jax.random.wrap_key_data(jnp.asarray(arr)) if is_key
+                    else jnp.asarray(arr))
+    return out
+
+
 def restore(ckpt_dir: str, step: int, template, shardings=None):
     """Rebuild ``template``-structured state; reshard onto ``shardings``
     (same treedef) if given — this is the elastic-restart entry point."""
@@ -123,12 +178,7 @@ def restore(ckpt_dir: str, step: int, template, shardings=None):
     for key, tpl, sh in zip(flat_keys, leaves_tpl, sh_leaves):
         meta = manifest[key]
         raw = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
-        if meta["dtype"] == "bfloat16":
-            arr = jnp.asarray(raw.view(jnp.bfloat16))
-        elif meta["dtype"].startswith("key"):
-            arr = raw
-        else:
-            arr = raw
+        arr, _ = _decode(meta, raw)
         if hasattr(tpl, "dtype") and str(tpl.dtype).startswith("key"):
             # typed PRNG keys round-trip through key_data
             arr = jax.random.wrap_key_data(jnp.asarray(raw))

@@ -1,0 +1,53 @@
+"""Alias-table degenerate weight rows (hypothesis-free so this module
+runs even without the optional test extra, unlike test_alias.py).
+
+Both cases occur in production tables: all-zero rows are padded-vocab
+words (V rounded up to the mesh model axis), single-nonzero rows are
+words the PPU draw placed in exactly one topic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.alias import alias_build, alias_sample
+
+
+@pytest.mark.parametrize("k", [2, 7, 64])
+def test_all_zero_row_falls_back_to_uniform(k, rng):
+    """An all-zero weight row must build the uniform table (prob == 1
+    everywhere: every slot keeps itself), so sampling is exactly
+    floor(u1 * k) — uniform over indices and independent of u2."""
+    prob, alias = jax.tree.map(
+        np.asarray, alias_build(jnp.zeros((k,), jnp.float32))
+    )
+    np.testing.assert_allclose(prob, np.ones(k))
+    u = rng.random((20_000, 2)).astype(np.float32)
+    idx = np.asarray(jax.vmap(
+        lambda uu: alias_sample(jnp.asarray(prob), jnp.asarray(alias),
+                                uu[0], uu[1])
+    )(jnp.asarray(u)))
+    np.testing.assert_array_equal(
+        idx, np.minimum((u[:, 0] * k).astype(np.int32), k - 1)
+    )
+    freq = np.bincount(idx, minlength=k) / len(u)
+    np.testing.assert_allclose(freq, np.full(k, 1.0 / k), atol=0.02)
+
+
+@pytest.mark.parametrize("k", [2, 5, 33])
+@pytest.mark.parametrize("hot", [0, 1, -1])
+def test_single_nonzero_row_samples_it_with_probability_one(k, hot, rng):
+    """One index holds all the mass: EVERY (u1, u2) pair must return it —
+    each slot either keeps itself (it is the hot index) or aliases to it
+    with prob[slot] == 0."""
+    hot = hot % k
+    p = np.zeros(k, np.float32)
+    p[hot] = float(rng.gamma(1.0)) + 0.1
+    prob, alias = alias_build(jnp.asarray(p))
+    g = np.linspace(0.0, 0.999999, 40, dtype=np.float32)
+    u1, u2 = np.meshgrid(g, g)
+    idx = np.asarray(jax.vmap(
+        lambda a, b: alias_sample(prob, alias, a, b)
+    )(jnp.asarray(u1.ravel()), jnp.asarray(u2.ravel())))
+    np.testing.assert_array_equal(idx, np.full(idx.shape, hot))

@@ -175,6 +175,60 @@ def test_streaming_kill_resume_bitwise_deterministic(rng):
     assert int(a.it) == int(b.it) == 4
 
 
+def test_streaming_checkpoints_are_incremental(rng):
+    """Mid-epoch saves rewrite ONLY the z slabs touched since the last
+    save (per-block version files), never the whole z_blocks array, and
+    GC keeps every version a retained checkpoint references."""
+    import os
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        zdir = os.path.join(d, "zstore")
+        stream.save(d, st)
+        first = set(os.listdir(zdir))
+        assert len(first) == store.num_blocks  # initial save: all slabs
+        # sweep 2 of 5 blocks, then a forced partial save
+        r = stream.iteration(st, ckpt_dir=d, stop_after_blocks=2)
+        assert r is None
+        new = set(os.listdir(zdir)) - first
+        assert len(new) == 2, new  # ONLY the swept slabs were rewritten
+        # every retained manifest's version vector must resolve on disk
+        from repro.train import checkpoint as CKPT
+        for s in CKPT.all_steps(d):
+            vers = np.load(os.path.join(d, f"step_{s}", "z_versions.npy"))
+            for b, v in enumerate(vers):
+                assert os.path.exists(
+                    os.path.join(zdir, f"block_{b}.v{int(v)}.npy")), (s, b)
+        # and the restore path reassembles the exact slabs
+        st2, kw = stream.restore(d)
+        assert kw["start_block"] == 2
+        np.testing.assert_array_equal(st2.z_blocks, st.z_blocks)
+
+
+def test_streaming_restore_rejects_legacy_z_blocks_format(rng):
+    """A checkpoint written by the pre-incremental format (full z_blocks
+    in the payload) must fail with a migration message, not a KeyError."""
+    import os
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=16)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+    from repro.train import checkpoint as CKPT
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 0, {
+            "model": {"n": st.n, "phi": st.phi, "varphi": st.varphi,
+                      "psi": st.psi, "l": st.l, "key": st.key, "it": st.it},
+            "z_blocks": st.z_blocks,
+            "cursor": np.int64(0),
+        })
+        with pytest.raises(ValueError, match="predates the incremental"):
+            stream.restore(d)
+
+
 def test_streaming_boundary_checkpoint_roundtrip(rng):
     corpus, mesh, cfg, sh = make_setup(rng, D=24)
     store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
