@@ -1,0 +1,71 @@
+"""Warn-only bench regression gate for the committed BENCH_hdp.json.
+
+Compares a fresh ``perf_hdp --stream`` artifact against the committed
+baseline, record by record (matched on mode / z_impl / block_docs), and
+flags tokens_per_s regressions beyond ``--threshold`` (default 20%).
+
+Warn-only by design: CI runners have noisy, heterogeneous CPUs, so a
+hard gate would flake — the step prints GitHub-annotation warnings and
+always exits 0 unless ``--strict`` is passed.
+
+  PYTHONPATH=src python -m benchmarks.check_bench \
+      --fresh BENCH_hdp_stream.json --baseline BENCH_hdp.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def _key(rec):
+    return (rec.get("mode"), rec.get("z_impl"), rec.get("block_docs"))
+
+
+def compare(fresh, baseline, threshold):
+    base_by_key = {_key(r): r for r in baseline if "tokens_per_s" in r}
+    regressions = []
+    for rec in fresh:
+        if "tokens_per_s" not in rec:
+            continue
+        base = base_by_key.get(_key(rec))
+        if base is None:
+            print(f"{_key(rec)}: no baseline record (new config?) — "
+                  f"{rec['tokens_per_s']:,} tok/s")
+            continue
+        ratio = rec["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+        line = (f"{_key(rec)}: {rec['tokens_per_s']:,.0f} tok/s vs baseline "
+                f"{base['tokens_per_s']:,.0f} ({ratio:.2f}x)")
+        if ratio < 1.0 - threshold:
+            regressions.append(line)
+            print(f"::warning title=bench regression::{line}")
+        else:
+            print(line)
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="just-measured stats JSON")
+    ap.add_argument("--baseline", required=True, help="committed stats JSON")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="flag when fresh < (1 - threshold) * baseline")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regression (default: warn only)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    regressions = compare(fresh, baseline, args.threshold)
+    if regressions:
+        print(f"{len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%} (warn-only)" if not args.strict else
+              f"{len(regressions)} regression(s) beyond {args.threshold:.0%}")
+        if args.strict:
+            sys.exit(1)
+    else:
+        print("bench check: no regressions beyond threshold")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,10 @@ def stream_bench(args):
         store = ShardedCorpusStore.from_corpus(
             corpus, block_docs, doc_multiple=n_dev
         )
-        cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=64,
+        # bucket must hold a document's active topics (min(K, L) —
+        # enforced at sampler construction since the delta-stats PR).
+        bucket = min(args.topics, 128)
+        cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
                           z_impl=args.z_impl, hist_cap=128)
         stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
         state = stream.init_state(jax.random.key(0))
@@ -132,8 +135,11 @@ def serve_bench(args):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="hdp-pubmed")
-    ap.add_argument("--out", default="BENCH_hdp.json",
-                    help="stats JSON path (CI uploads this as an artifact)")
+    ap.add_argument("--out", default=None,
+                    help="stats JSON path (default: BENCH_hdp.json for "
+                         "--stream — the committed trajectory baseline — "
+                         "and a mode-suffixed file otherwise, so serve/"
+                         "dry-run runs never clobber the baseline)")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--stream", action="store_true",
                     help="benchmark the streaming minibatch driver")
@@ -153,6 +159,10 @@ def main():
     ap.add_argument("--train-iters", type=int, default=15)
     ap.add_argument("--vocab", type=int, default=64)
     args = ap.parse_args()
+    if args.out is None:
+        args.out = ("BENCH_hdp.json" if args.stream else
+                    "BENCH_hdp_serve.json" if args.serve else
+                    "BENCH_hdp_dryrun.json")
     if args.serve:
         return serve_bench(args)
     if args.stream:

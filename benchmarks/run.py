@@ -40,7 +40,9 @@ def emit(name: str, us: float, derived: str = ""):
     print(row, flush=True)
 
 
-def _chain(corpus, k, impl, iters, seed=0, bucket=64):
+def _chain(corpus, k, impl, iters, seed=0, bucket=None):
+    if bucket is None:  # sparse z-step capacity bound (core/hdp.py)
+        bucket = min(k, corpus.max_len)
     cfg = H.HDPConfig(K=k, V=corpus.V, bucket=bucket, z_impl=impl,
                       hist_cap=min(corpus.max_len, 128))
     tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
@@ -150,10 +152,10 @@ def bench_z_step_only():
         fs = jax.jit(lambda z: z_step_sparse_tables(
             tokens, mask, z, phi, cfg.alpha, u, cfg.bucket, q_a, ap, al))
         for name, f in (("dense", fd), ("sparse", fs)):
-            f(state.z).block_until_ready()
+            jax.block_until_ready(f(state.z))
             t0 = time.perf_counter()
             for _ in range(5):
-                f(state.z).block_until_ready()
+                jax.block_until_ready(f(state.z))
             emit(f"z_step_only/{name}_K{k}",
                  (time.perf_counter() - t0) / 5 * 1e6, "")
 

@@ -39,7 +39,7 @@ def main():
     mesh = make_host_mesh()
     corpus = shard_balanced(corpus, len(jax.devices()))
     v_pad = ((corpus.V + 15) // 16) * 16
-    cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=64, z_impl="sparse",
+    cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=min(args.topics, 256), z_impl="sparse",
                       hist_cap=256)
     sh = ShardedHDP(mesh, cfg)
     ts, ms = sh.corpus_shardings()

@@ -59,10 +59,16 @@ def _alias_build_row(p: jax.Array) -> tuple[jax.Array, jax.Array]:
         qg = q_cur[g_pos]
         new_qg = qg - (1.0 - qs)
 
-        alias_next = jnp.where(
-            do_pair, alias_cur.at[s_pos].set(g_pos), alias_cur
+        # Guarded one-element scatters (write back the old value when the
+        # step is a no-op) instead of `where(do_pair, arr.at[..], arr)`
+        # full-array selects: the latter copies the whole (K,) row — and
+        # under the vmap over word types the whole (V, K) table — every
+        # scan step, turning the build into O(V*K^2). The scatter form is
+        # O(V) per step (O(V*K) total) and bitwise-identical.
+        alias_next = alias_cur.at[s_pos].set(
+            jnp.where(do_pair, g_pos, alias_cur[s_pos])
         )
-        q_next = jnp.where(do_pair, q_cur.at[g_pos].set(new_qg), q_cur)
+        q_next = q_cur.at[g_pos].set(jnp.where(do_pair, new_qg, qg))
 
         small_ptr_next = jnp.where(
             do_pair & ~fifo_nonempty, small_ptr + 1, small_ptr
@@ -71,8 +77,8 @@ def _alias_build_row(p: jax.Array) -> tuple[jax.Array, jax.Array]:
 
         # If the large dropped below 1 it becomes small: demote and move g.
         demote = do_pair & (new_qg < 1.0)
-        fifo_next = jnp.where(
-            demote, fifo.at[fifo_tail % k].set(g_pos), fifo
+        fifo_next = fifo.at[fifo_tail % k].set(
+            jnp.where(demote, g_pos, fifo[fifo_tail % k])
         )
         fifo_tail_next = jnp.where(demote, fifo_tail + 1, fifo_tail)
         g_ptr_next = jnp.where(demote, g_ptr - 1, g_ptr)

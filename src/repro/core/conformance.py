@@ -27,6 +27,11 @@ repo's strongest correctness check on the z-step: any divergence in
 masking, decrement/increment ordering, branch selection, or alias
 mechanics shows up as a hard bit mismatch instead of a statistical blur
 (tests/test_z_conformance.py).
+
+All strategies follow the repo-wide z-step return contract
+``(z_new, m)`` (core/hdp.py): the (D, K) per-document histogram comes
+out of the sweep carry and must itself agree bitwise across strategies
+(and with ``doc_topic_counts(z_new)``).
 """
 
 from __future__ import annotations
@@ -48,7 +53,7 @@ def build_tables(phi: jax.Array, psi: jax.Array, alpha: float, w: int):
 def z_step_dense_tables(
     tokens: jax.Array, mask: jax.Array, z: jax.Array, uniforms: jax.Array,
     q_a: jax.Array, fpack: jax.Array, ipack: jax.Array, *, kk: int,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
     """Dense execution of the canonical map.
 
     The document term is a dense (K,) accumulation in ascending topic
@@ -106,8 +111,7 @@ def z_step_dense_tables(
             m = m.at[k_new].add(jnp.where(live, 1, 0))
             return z_d.at[i].set(k_new), m
 
-        z_d, _ = jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
-        return z_d
+        return jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
 
     return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)
 
@@ -116,8 +120,9 @@ def z_step_conformant(
     impl: str,
     tokens: jax.Array, mask: jax.Array, z: jax.Array, uniforms: jax.Array,
     q_a: jax.Array, fpack: jax.Array, ipack: jax.Array, *, kk: int,
-) -> jax.Array:
-    """Run the canonical z-step via the chosen execution strategy."""
+) -> tuple[jax.Array, jax.Array]:
+    """Run the canonical z-step via the chosen execution strategy;
+    returns ``(z_new, m)``."""
     if impl == "dense":
         return z_step_dense_tables(
             tokens, mask, z, uniforms, q_a, fpack, ipack, kk=kk

@@ -18,7 +18,22 @@ One Gibbs iteration = Algorithm 2 of the paper:
   3. l-step    : binomial trick                     (parallel over topics)
   4. Psi-step  : FGEM stick-breaking posterior, sigma_{K*} = 1
 
-Three z-step implementations share one signature:
+Three z-step implementations share one signature AND one return
+contract — a sweep *emits* its sufficient statistics:
+
+    z_step_*(...) -> (z_new, m)
+
+where ``m`` is the (D, K) per-document topic histogram of ``z_new``,
+read straight out of the sweep carry (the sweep maintains it anyway for
+the document term), bitwise-equal to ``doc_topic_counts(z_new, mask, K)``
+by construction. Drivers then update the topic-word statistic by exact
+integer *delta* scatters (``delta_n``) over the changed tokens instead
+of a from-zero ``count_n`` recount: ``n + delta_n(z_old, z_new, ...)``
+is bitwise-identical to ``count_n(z_new, ...)`` in integer arithmetic,
+and after burn-in — when most tokens keep their topic — the delta is
+the sparsest statistic the sampler has (the update-sparsity analogue of
+the paper's "use every available source of sparsity").
+
   * ``dense``  — O(K) per token inverse-CDF; the semantics oracle and the
                  MXU-friendly baseline at small K.
   * ``sparse`` — the paper's doubly sparse scheme: per-word alias tables
@@ -82,6 +97,30 @@ def count_n(z: jax.Array, tokens: jax.Array, mask: jax.Array, k: int, v: int) ->
     )
 
 
+def delta_n(
+    z_old: jax.Array, z_new: jax.Array, tokens: jax.Array, mask: jax.Array,
+    k: int, v: int,
+) -> jax.Array:
+    """Exact integer update to the topic-word statistic from one sweep.
+
+    Scatters +1 at (z_new, token) and -1 at (z_old, token) for every
+    *changed* live token; unchanged and masked tokens contribute exact
+    zeros. Because n is integer-valued, ``count_n(z_old) + delta`` is
+    bitwise-equal to ``count_n(z_new)`` — no recount, no fresh (K, V)
+    histogram of the untouched majority of tokens.
+    """
+    ch = (mask & (z_new != z_old)).astype(jnp.int32)
+    zo = jnp.where(mask, z_old, 0).reshape(-1)
+    zn = jnp.where(mask, z_new, 0).reshape(-1)
+    tt = jnp.where(mask, tokens, 0).reshape(-1)
+    chf = ch.reshape(-1)
+    return (
+        jnp.zeros((k, v), jnp.int32)
+        .at[zn, tt].add(chf)
+        .at[zo, tt].add(-chf)
+    )
+
+
 def doc_topic_counts(z: jax.Array, mask: jax.Array, k: int) -> jax.Array:
     """Per-document topic histogram m: (D, K) from (D, L) assignments."""
     zz = jnp.where(mask, z, 0)
@@ -131,8 +170,12 @@ def z_step_dense(
     tokens: jax.Array, mask: jax.Array, z: jax.Array, phi: jax.Array,
     psi: jax.Array, alpha: float, uniforms: jax.Array,
     unroll: bool = False,
-) -> jax.Array:
-    """O(K)-per-token Gibbs sweep; the semantics oracle for all z-steps."""
+) -> tuple[jax.Array, jax.Array]:
+    """O(K)-per-token Gibbs sweep; the semantics oracle for all z-steps.
+
+    Returns ``(z_new, m)`` with m the (D, K) final per-doc histogram
+    emitted from the sweep carry (see module docstring).
+    """
     k = phi.shape[0]
     apsi = alpha * psi  # (K,)
 
@@ -154,8 +197,7 @@ def z_step_dense(
             m = m.at[k_new].add(live.astype(jnp.int32))
             return z_d.at[i].set(k_new), m
 
-        z_d, _ = _sweep(body, tok_d.shape[0], (z_d, m), unroll)
-        return z_d
+        return _sweep(body, tok_d.shape[0], (z_d, m), unroll)
 
     return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)
 
@@ -181,7 +223,7 @@ def build_alias_tables(
 def z_step_sparse(
     tokens: jax.Array, mask: jax.Array, z: jax.Array, phi: jax.Array,
     psi: jax.Array, alpha: float, uniforms: jax.Array, bucket: int,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
     """Doubly sparse z-step: alias tables (term a) + active-topic bucket
     (term b), with swap-remove compaction so the bucket holds exactly the
     topics with m_{d,k} > 0. Requires bucket >= min(K, L)."""
@@ -196,9 +238,16 @@ def z_step_sparse_tables(
     alpha: float, uniforms: jax.Array, bucket: int,
     q_a: jax.Array, aprob: jax.Array, aalias: jax.Array,
     unroll: bool = False,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
     """Sparse z-step with pre-built alias tables (sharded path builds the
-    tables model-parallel and gathers them; see core/sharded.py)."""
+    tables model-parallel and gathers them; see core/sharded.py).
+
+    The fixed-size active-topic bucket silently drops term-(b) mass once
+    a document activates more than ``bucket`` topics (``can_insert``
+    fails while m keeps counting), so samplers must be constructed with
+    ``bucket >= min(K, L)`` — ``validate_bucket`` enforces this where the
+    corpus geometry is known (init_state / StreamingHDP).
+    """
     k = phi.shape[0]
 
     def doc_sweep(tok_d, msk_d, z_d, u_d):
@@ -250,8 +299,8 @@ def z_step_sparse_tables(
             cnt = jnp.where(can_insert, cnt + 1, cnt)
             return z_d.at[i].set(k_new), m, ids, cnt
 
-        z_d, *_ = _sweep(body, tok_d.shape[0], (z_d, m, ids0, cnt0), unroll)
-        return z_d
+        z_d, m, *_ = _sweep(body, tok_d.shape[0], (z_d, m, ids0, cnt0), unroll)
+        return z_d, m
 
     return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)
 
@@ -260,10 +309,35 @@ def z_step_sparse_tables(
 # full Gibbs iteration (Algorithm 2; Algorithm 1 when exact_phi)
 # --------------------------------------------------------------------------
 
+def validate_bucket(cfg: HDPConfig, max_len: int) -> None:
+    """Reject sparse-z-step configs whose bucket can overflow.
+
+    A document with L live tokens can hold at most min(K, L) distinct
+    active topics; if ``bucket`` is smaller, ``z_step_sparse_tables``
+    silently drops term-(b) mass on overflow (the active list rejects
+    the insert while m keeps counting), biasing the sampler. Raise at
+    sampler construction — where the corpus geometry is first known —
+    instead of sampling from the wrong distribution.
+    """
+    if cfg.z_impl != "sparse":
+        return
+    need = min(cfg.K, max_len)
+    if cfg.bucket < need:
+        raise ValueError(
+            f"HDPConfig.bucket={cfg.bucket} cannot hold a document's "
+            f"active topics: with K={cfg.K} and max document length "
+            f"{max_len}, a document can activate up to min(K, L)={need} "
+            f"topics, and the sparse z-step silently drops term-(b) mass "
+            f"beyond the bucket. Raise bucket to >= {need} (or use "
+            f"z_impl='dense'/'pallas')."
+        )
+
+
 def init_state(
     key: jax.Array, tokens: jax.Array, mask: jax.Array, cfg: HDPConfig
 ) -> HDPState:
     """Initialize with a single topic (paper Section 3, following Teh)."""
+    validate_bucket(cfg, tokens.shape[1])
     kp, kd = jax.random.split(key)
     z = jnp.zeros_like(tokens)
     n = count_n(z, tokens, mask, cfg.K, cfg.V)
@@ -276,6 +350,7 @@ def init_state(
 
 
 def _z_step(cfg: HDPConfig, tokens, mask, z, phi, psi, uniforms):
+    """Dispatch to the configured z-step; every impl returns (z_new, m)."""
     if cfg.z_impl == "dense":
         return z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, uniforms,
                             unroll=cfg.unroll_z)
@@ -306,13 +381,13 @@ def gibbs_iteration(
     else:
         phi, varphi = ppu_sample(k_phi, state.n, cfg.beta)
 
-    # 2. z-step (parallel over documents)
+    # 2. z-step (parallel over documents); the sweep emits its per-doc
+    #    histogram m, and n advances by the exact integer delta over
+    #    changed tokens — no from-zero recount (see module docstring).
     uniforms = jax.random.uniform(k_u, tokens.shape + (3,), jnp.float32)
-    z = _z_step(cfg, tokens, mask, state.z, phi, state.psi, uniforms)
+    z, m = _z_step(cfg, tokens, mask, state.z, phi, state.psi, uniforms)
 
-    # sufficient statistics for steps 3-4 and the next iteration
-    n = count_n(z, tokens, mask, cfg.K, cfg.V)
-    m = doc_topic_counts(z, mask, cfg.K)
+    n = state.n + delta_n(state.z, z, tokens, mask, cfg.K, cfg.V)
     dh = d_histogram(m, cfg.hist_cap)
 
     # 3. l-step (binomial trick; parallel over topics, constant in D/N)

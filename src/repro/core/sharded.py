@@ -17,10 +17,18 @@ are derived from exactly these):
   1. psum(row sums)                       [model]        K * 4B
   2. all_gather(phi_shard)                [model]        K*V*4B / dev
   3. all_gather(q_a, alias prob/idx)      [model]        ~2 K*V / dev
-  4. local z-step                         none
-  5. psum_scatter(n_local)                [model]        K*V*4B
-  6. psum(n_vshard)                       [pod, data]    K*V/M * 4B
-  7. psum(d_hist)                         [all]          K*(P+1)*4B
+  4. local z-step (emits z', per-doc m)   none
+  5. psum_scatter(delta_n local)          [model]        K*V*4B
+  6. psum(delta_n vshard)                 [pod, data]    K*V/M * 4B
+  7. psum(d_hist from emitted m)          [all]          K*(P+1)*4B
+
+Steps 5-7 reduce *update deltas*, not recounts: the z-sweep emits its
+per-document histogram m straight from the sweep carry, and the
+topic-word statistic advances by ``n += delta_n(z_old, z_new)`` — an
+exact integer scatter over changed tokens only (core/hdp.py). The wire
+bytes of 5-6 are unchanged (dense (K, V) int32 either way), but the
+from-zero count_n scatter of every token and the separate
+doc_topic_counts pass are gone from the per-block hot path.
 
 Baseline = paper-faithful replicated-Phi pattern (MALLET shared memory ->
 all_gather). The config flags `gather_tables` / `phi_dtype` select the
@@ -180,6 +188,7 @@ class ShardedHDP:
 
     def _z_sweep(self, ztables, z, tokens, mask, psi, k_u):
         """Step 4: z-step on the local document shard (no communication).
+        Returns ``(z_new, m)`` — every impl emits its per-doc histogram.
 
         ``k_u`` must already be block-specific for streaming; the
         per-device fold happens here so a single-block stream consumes
@@ -208,25 +217,27 @@ class ShardedHDP:
             q_a, aprob, aalias, unroll=cfg.unroll_z,
         )
 
-    def _block_stats(self, z, tokens, mask):
-        """Steps 5-7a: sufficient statistics for one document block.
+    def _block_stats(self, z_old, z_new, m, tokens, mask):
+        """Steps 5-7a: sufficient-statistic *deltas* for one block.
 
-        Returns (n_shard, dh) — the vocab-sharded topic-word statistic
-        and the fully-reduced (replicated) document histogram. Both are
-        pure sums over documents, so per-block results merge by addition
-        (exactly: integer arithmetic throughout).
+        Returns (dn_shard, dh) — the vocab-sharded exact integer update
+        to the topic-word statistic (``n_next = n + dn``, bitwise-equal
+        to a recount) and the fully-reduced document histogram built
+        from the sweep-emitted m. Both are pure sums over documents, so
+        per-block results merge by addition (exactly: integer
+        arithmetic throughout). No count_n / doc_topic_counts recompute
+        happens here — the sweep already holds both.
         """
         cfg = self.cfg
-        n_local = H.count_n(z, tokens, mask, cfg.K, cfg.V)
-        n_shard = jax.lax.psum_scatter(
-            n_local, self.model_axis, scatter_dimension=1, tiled=True
+        dn_local = H.delta_n(z_old, z_new, tokens, mask, cfg.K, cfg.V)
+        dn_shard = jax.lax.psum_scatter(
+            dn_local, self.model_axis, scatter_dimension=1, tiled=True
         )
         if self.repl_axes:
-            n_shard = jax.lax.psum(n_shard, self.repl_axes)
-        m = H.doc_topic_counts(z, mask, cfg.K)
+            dn_shard = jax.lax.psum(dn_shard, self.repl_axes)
         dh = H.d_histogram(m, cfg.hist_cap)
         dh = jax.lax.psum(dh, tuple(self.mesh.axis_names))
-        return n_shard, dh
+        return dn_shard, dh
 
     # -- the iteration ----------------------------------------------------
     def _local_iteration(self, z, tokens, mask, n_shard, psi, l, key, it):
@@ -235,8 +246,10 @@ class ShardedHDP:
         phi_shard, varphi_shard, ztables = self._phi_tables(
             n_shard, psi, k_phi
         )
-        z = self._z_sweep(ztables, z, tokens, mask, psi, k_u)
-        n_shard, dh = self._block_stats(z, tokens, mask)
+        z_new, m = self._z_sweep(ztables, z, tokens, mask, psi, k_u)
+        dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask)
+        z = z_new
+        n_shard = n_shard + dn_shard
 
         # 7b. l and Psi: replicated-deterministic (same key everywhere).
         l = sample_l(k_l, dh, psi, cfg.alpha)
@@ -307,13 +320,17 @@ class ShardedHDP:
 
     def z_block_fn(self):
         """(ztables, z_b, tokens_b, mask_b, psi, k_ub) ->
-        (z_b', n_contrib, dh_contrib); one call per corpus block."""
+        (z_b', dn_contrib, dh_contrib); one call per corpus block.
+
+        ``dn_contrib`` is the block's exact integer delta to n (not a
+        recount): the streaming driver merges it with
+        ``n += dn_contrib`` (core/streaming.py)."""
         s = self.specs()
 
         def local(ztables, z, tokens, mask, psi, k_ub):
-            z = self._z_sweep(ztables, z, tokens, mask, psi, k_ub)
-            n_shard, dh = self._block_stats(z, tokens, mask)
-            return z, n_shard, dh
+            z_new, m = self._z_sweep(ztables, z, tokens, mask, psi, k_ub)
+            dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask)
+            return z_new, dn_shard, dh
 
         return compat.shard_map(
             local,

@@ -11,8 +11,25 @@ within each Gibbs iteration:
   * the Phi-step (PPU draw + z-step table build/gather) runs ONCE per
     iteration — valid because Phi and Psi are held fixed during the
     z-step, making the block sweep embarrassingly parallel over blocks;
-  * per-block sufficient statistics (topic-word counts, the l-step
-    document histogram) merge by integer addition into accumulators.
+  * per-block sufficient statistics merge as *deltas*: the z-sweep
+    emits its per-document histogram m from the sweep carry and the
+    block's exact integer delta to the topic-word statistic, so the hot
+    loop contains no ``count_n`` / ``doc_topic_counts`` recompute —
+    ``n`` advances device-resident by ``n += delta_b`` (bitwise-equal
+    to a recount; integer arithmetic throughout).
+
+The per-block timeline is fully overlapped, with the driver thread only
+*dispatching* work:
+
+    H2D   stage block b+1          (BlockPrefetcher daemon thread)
+    sweep block b                  (device, async dispatch)
+    D2H   write back block b-1     (BlockWriteback daemon thread)
+
+The driver never blocks on a sweep it has dispatched: the swept z block
+is handed to the write-back thread, which materializes it (waiting on
+the device there) and stores it into the host slab. The only driver
+sync points are mid-epoch checkpoint saves (write-back flush) and the
+iteration tail.
 
 Randomness contract: each iteration splits the chain key exactly like
 the monolithic sampler (key -> k_phi, k_u, k_l, k_psi); block b derives
@@ -42,7 +59,8 @@ from repro.core import hdp as H
 from repro.core.polya_urn import ppu_sample
 from repro.core.sharded import ShardedHDP
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
-from repro.data.stream import BlockPrefetcher, ShardedCorpusStore
+from repro.data.stream import (BlockPrefetcher, BlockWriteback,
+                               ShardedCorpusStore)
 from repro.train import checkpoint as CKPT
 
 
@@ -139,11 +157,13 @@ class StreamingHDP:
     """
 
     def __init__(self, sharded: ShardedHDP, store: ShardedCorpusStore, *,
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2, writeback_depth: int = 2):
         self.sh = sharded
         self.cfg = sharded.cfg
         self.store = store
+        H.validate_bucket(self.cfg, store.max_len)
         self.prefetch_depth = prefetch_depth
+        self.writeback_depth = writeback_depth
         ss = sharded.state_shardings()
         ts, ms = sharded.corpus_shardings()
         self._z_sh, self._n_sh = ss.z, ss.n
@@ -151,6 +171,11 @@ class StreamingHDP:
         self._ts, self._ms = ts, ms
         self._phi_fn = jax.jit(sharded.phi_tables_fn())
         self._z_fn = jax.jit(sharded.z_block_fn(), donate_argnums=(1,))
+        # one jitted dispatch per block for the statistic merge (the
+        # python-level `acc + c` pair it replaces was two uncompiled
+        # dispatches on the driver's critical path).
+        self._merge_fn = jax.jit(
+            lambda n, dn, dh, dhc: (n + dn, dh + dhc))
         self._split_fn = jax.jit(
             functools.partial(jax.random.split, num=5))
         cfg = self.cfg
@@ -237,15 +262,23 @@ class StreamingHDP:
 
     def iteration(
         self, state: StreamingState, *,
-        start_block: int = 0, n_acc=None, dh_acc=None, ztables=None,
+        start_block: int = 0, n_run=None, dh_acc=None, ztables=None,
         ckpt_dir: Optional[str] = None,
         ckpt_every_blocks: Optional[int] = None,
         stop_after_blocks: Optional[int] = None,
     ) -> Optional[StreamingState]:
         """One Gibbs iteration = one sweep over all blocks.
 
-        The keyword arguments exist for mid-epoch resume (start_block +
-        accumulators restored from a checkpoint) and for tests that
+        Per block the jitted sweep emits (z', delta_n, dh) and the
+        device-resident running statistic advances by
+        ``n_run += delta_n`` — no recount anywhere in the loop. Swept z
+        blocks are written back to host asynchronously (BlockWriteback);
+        the driver thread only dispatches, so block b+1's H2D staging,
+        block b's sweep, and block b-1's D2H write-back overlap.
+
+        The keyword arguments exist for mid-epoch resume (start_block,
+        the running statistic ``n_run``, the histogram accumulator
+        ``dh_acc``, restored from a checkpoint) and for tests that
         simulate a mid-epoch kill (``stop_after_blocks``). Returns the
         advanced state, or None if the sweep was stopped early — the
         in-flight iteration then lives ONLY in the checkpoint (a partial
@@ -266,9 +299,8 @@ class StreamingHDP:
             )
         else:
             phi_shard, varphi_shard, ztables = ztables
-        if n_acc is None:
-            n_acc = jax.device_put(
-                jnp.zeros((cfg.K, cfg.V), jnp.int32), self._n_sh)
+        if n_run is None:
+            n_run = state.n  # running statistic: n of the incoming z
         if dh_acc is None:
             dh_acc = jax.device_put(
                 jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
@@ -278,37 +310,43 @@ class StreamingHDP:
         done = 0
         saved_cursor = -1
         staged = self._staged_blocks(z_blocks, start_block)
+        writer = BlockWriteback(
+            lambda b, arr: z_blocks.__setitem__(b, arr),
+            depth=self.writeback_depth,
+        )
         try:
             for b, tokens_b, mask_b, z_b in staged:
                 # block 0 consumes k_u unchanged => a single-block stream
                 # is bitwise the monolithic sampler; later blocks fold
                 # their index.
                 k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
-                z_b, n_c, dh_c = self._z_fn(
+                z_b, dn_c, dh_c = self._z_fn(
                     ztables, z_b, tokens_b, mask_b, state.psi, k_ub
                 )
-                n_acc = n_acc + n_c
-                dh_acc = dh_acc + dh_c
-                z_blocks[b] = np.asarray(z_b)
+                n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
+                writer.submit(b, z_b)
                 self._touch_z(b)
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
                         and cursor < self.store.num_blocks
                         and cursor % ckpt_every_blocks == 0):
-                    self._save_partial(ckpt_dir, state, cursor, n_acc, dh_acc)
+                    writer.flush()  # checkpoint reads the host slabs
+                    self._save_partial(ckpt_dir, state, cursor, n_run, dh_acc)
                     saved_cursor = cursor
                 if stop_after_blocks is not None and done >= stop_after_blocks:
                     if cursor < self.store.num_blocks:
                         if saved_cursor != cursor:
+                            writer.flush()
                             self._save_partial(
-                                ckpt_dir, state, cursor, n_acc, dh_acc)
+                                ckpt_dir, state, cursor, n_run, dh_acc)
                         return None
         finally:
             staged.close()  # unblock the prefetch worker on early exit
+            writer.close()  # drain outstanding write-backs
         l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
         return StreamingState(
-            n=n_acc, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
+            n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
             key=key, it=state.it + 1, z_blocks=z_blocks,
         )
 
@@ -347,7 +385,7 @@ class StreamingHDP:
     # ZBlockStore (only blocks touched since the last save are written)
     # and the payload records the (B,) version vector + block geometry.
 
-    def _payload(self, state: StreamingState, cursor: int, n_acc, dh_acc,
+    def _payload(self, state: StreamingState, cursor: int, n_run, dh_acc,
                  z_versions: np.ndarray):
         store = self.store
         return {
@@ -361,7 +399,11 @@ class StreamingHDP:
                 [store.num_blocks, store.block_docs, store.max_len], np.int64
             ),
             "cursor": np.int64(cursor),
-            "n_acc": n_acc,
+            # running topic-word statistic at the cursor (state.n + the
+            # merged deltas of swept blocks) — the delta-format marker:
+            # pre-delta payloads stored partial fresh counts under
+            # "n_acc" instead, which restore() refuses mid-epoch.
+            "n_run": n_run,
             "dh_acc": dh_acc,
         }
 
@@ -380,11 +422,11 @@ class StreamingHDP:
             "z_versions": np.zeros((store.num_blocks,), np.int64),
             "z_shape": np.zeros((3,), np.int64),
             "cursor": np.int64(0),
-            "n_acc": jnp.zeros((cfg.K, cfg.V), jnp.int32),
+            "n_run": jnp.zeros((cfg.K, cfg.V), jnp.int32),
             "dh_acc": jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
         }
 
-    def _save(self, ckpt_dir, state, cursor, n_acc, dh_acc) -> str:
+    def _save(self, ckpt_dir, state, cursor, n_run, dh_acc) -> str:
         """Incremental save: dirty z slabs first (new immutable version
         files), then the atomic payload commit that references them,
         then GC of versions no retained checkpoint references. A crash
@@ -394,7 +436,7 @@ class StreamingHDP:
         versions, _ = zs.sync(state.z_blocks, self._z_stamp)
         step = int(state.it) * self.store.num_blocks + cursor
         path = CKPT.save(ckpt_dir, step,
-                         self._payload(state, cursor, n_acc, dh_acc, versions))
+                         self._payload(state, cursor, n_run, dh_acc, versions))
         referenced = set()
         for s in CKPT.all_steps(ckpt_dir):
             if "z_versions" in CKPT.manifest_keys(ckpt_dir, s):
@@ -406,13 +448,14 @@ class StreamingHDP:
         return path
 
     def save(self, ckpt_dir: str, state: StreamingState) -> str:
-        """Iteration-boundary checkpoint (cursor = 0)."""
+        """Iteration-boundary checkpoint (cursor = 0; n_run/dh_acc are
+        dead weight there — restore never reads them at cursor 0)."""
         zero_n = jnp.zeros((self.cfg.K, self.cfg.V), jnp.int32)
         zero_dh = jnp.zeros((self.cfg.K, self.cfg.hist_cap + 1), jnp.int32)
         return self._save(ckpt_dir, state, 0, zero_n, zero_dh)
 
-    def _save_partial(self, ckpt_dir, state, cursor, n_acc, dh_acc):
-        return self._save(ckpt_dir, state, cursor, n_acc, dh_acc)
+    def _save_partial(self, ckpt_dir, state, cursor, n_run, dh_acc):
+        return self._save(ckpt_dir, state, cursor, n_run, dh_acc)
 
     def restore(self, ckpt_dir: str):
         """Returns (state, resume_kwargs): pass resume_kwargs to
@@ -424,14 +467,30 @@ class StreamingHDP:
         # legacy format guard: payloads written before the incremental
         # ZBlockStore embed the full z_blocks array and lack z_versions —
         # fail with a migration hint instead of a KeyError mid-restore.
-        if "z_versions" not in CKPT.manifest_keys(ckpt_dir, step):
+        keys = CKPT.manifest_keys(ckpt_dir, step)
+        if "z_versions" not in keys:
             raise ValueError(
                 f"checkpoint step_{step} in {ckpt_dir!r} predates the "
                 "incremental z-block format (it embeds z_blocks). "
                 "Finish that run with the repo revision that wrote it, "
                 "save a fresh checkpoint, or restart training."
             )
-        payload = CKPT.restore_latest(ckpt_dir, self._template())
+        template = self._template()
+        if "n_run" not in keys:
+            # pre-delta payload: "n_acc" held partial *fresh counts*, not
+            # the running statistic — a mid-epoch resume would merge it
+            # wrongly. Boundary checkpoints (cursor 0) never read it and
+            # restore fine.
+            if int(CKPT.load_array(ckpt_dir, step, "cursor")) != 0:
+                raise ValueError(
+                    f"mid-epoch checkpoint step_{step} in {ckpt_dir!r} "
+                    "predates the delta-statistics format (its n_acc "
+                    "holds partial recounts, not the running n). Finish "
+                    "that epoch with the repo revision that wrote it, or "
+                    "resume from the last iteration-boundary checkpoint."
+                )
+            template["n_acc"] = template.pop("n_run")
+        payload = CKPT.restore_latest(ckpt_dir, template)
         if payload is None:
             return None, {}
         store = self.store
@@ -465,12 +524,13 @@ class StreamingHDP:
         if cursor == 0:
             return state, {}
         # Mid-epoch: re-derive the current iteration's tables from the
-        # pre-split key (deterministic), hand back the partial sums.
+        # pre-split key (deterministic), hand back the running statistic
+        # and the histogram partial sum.
         _, k_phi, _, _, _ = self._split_fn(state.key)
         ztables = self._phi_fn(state.n, state.psi, k_phi)
         return state, {
             "start_block": cursor,
-            "n_acc": jax.device_put(payload["n_acc"], self._n_sh),
+            "n_run": jax.device_put(payload["n_run"], self._n_sh),
             "dh_acc": jax.device_put(payload["dh_acc"], self._repl_sh),
             "ztables": ztables,
         }

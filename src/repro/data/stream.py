@@ -13,6 +13,14 @@ pipeline removes that cap:
   * ``BlockPrefetcher`` double-buffers the host->device transfer: while
     the sampler sweeps block b, a background thread stages block b+1 onto
     the device, so the transfer hides behind compute.
+  * ``BlockWriteback`` double-buffers the device->host direction: swept
+    z blocks are materialized (which waits on the device computation)
+    and written into the host slab array on a background thread, so the
+    driver never blocks on a sweep it already dispatched.
+
+Together they give the fully overlapped streaming timeline
+(core/streaming.py): block i+1's H2D staging, block i's sweep, and
+block i-1's D2H write-back all in flight at once.
 
 Only per-block tensors (tokens, mask, z) plus the O(K*V) model state are
 ever device-resident — device memory is bounded by the block budget, not
@@ -114,6 +122,73 @@ class ShardedCorpusStore:
         return cls(tokens, mask, meta["V"],
                    block_docs or meta["block_docs"],
                    doc_multiple=doc_multiple)
+
+
+class BlockWriteback:
+    """Bounded async device->host write-back of swept blocks.
+
+    ``submit(index, device_array)`` enqueues a just-dispatched (possibly
+    still executing) device array; the daemon thread materializes it —
+    ``np.asarray`` blocks until the device computation finishes, off the
+    driver thread — and hands the host array to ``sink(index, array)``.
+    The bounded queue (``depth``) backpressures the driver so at most
+    ``depth`` swept blocks are pinned on device awaiting write-back.
+
+    ``flush()`` waits until everything submitted so far has been written
+    (call before reading the sink's target, e.g. a checkpoint save);
+    ``close()`` drains and stops the worker. Worker errors are re-raised
+    on the next flush/close.
+    """
+
+    _DONE = object()
+
+    def __init__(self, sink, *, depth: int = 2):
+        self._sink = sink
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._DONE:
+                    return
+                if self._err is None:
+                    b, arr = item
+                    self._sink(b, np.asarray(arr))
+            except BaseException as e:  # surfaced on flush/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, index: int, device_array):
+        self._q.put((index, device_array))
+
+    def flush(self):
+        self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        """Drain outstanding writes and stop the worker (idempotent)."""
+        if self._thread.is_alive():
+            self._q.put(self._DONE)
+            self._thread.join(timeout=600)
+            if self._thread.is_alive():
+                # never return while the worker may still be mutating the
+                # sink's target — a silently-torn z slab is worse than an
+                # exception.
+                raise RuntimeError(
+                    "BlockWriteback worker failed to drain within 600s "
+                    "(wedged device transfer?)"
+                )
+        self._raise_pending()
 
 
 class BlockPrefetcher:

@@ -23,6 +23,15 @@ equality of the sampled z).
 Grid: one program per block of DB documents; within a program the sweep
 is sequential over each document's tokens (Gibbs order within documents,
 parallel across documents — exactly the parallelism the paper licenses).
+The document axis is padded up to a multiple of ``doc_block`` with
+all-False mask rows (pad rows sweep to nothing and emit zero
+histograms), so the grid never degenerates to one-document programs
+when D is prime or coprime with the block size.
+
+Outputs follow the repo-wide z-step contract: ``(z_new, m)`` where m is
+the (D, K) per-document topic histogram of z_new, written from the
+kernel's VMEM-resident sweep carry after each document's sweep — the
+driver-side ``doc_topic_counts`` recompute is gone.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ def _z_kernel(
     ipack_ref,    # (V, 2, W) int32
     # outputs
     z_out_ref,    # (DB, L) int32
+    m_out_ref,    # (DB, K) int32 — final per-document histograms
     # scratch
     m_ref,        # (K,) int32 VMEM — per-document histogram
     frow_ref,     # (2, W) f32 VMEM
@@ -132,6 +142,8 @@ def _z_kernel(
             return 0
 
         jax.lax.fori_loop(0, ll, tok_body, 0)
+        # emit the sweep-carry histogram: m_out[d] == hist(z_out[d]).
+        m_out_ref[d, :] = m_ref[...]
         return 0
 
     jax.lax.fori_loop(0, db, doc_body, 0)
@@ -150,18 +162,28 @@ def hdp_z_pallas(
     kk: int,
     doc_block: int = 8,
     interpret: bool = True,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
     d, l = tokens.shape
     v, _, w = fpack.shape
     db = min(doc_block, d)
-    while d % db:  # largest block <= doc_block that divides D
-        db -= 1
-    grid = (d // db,)
+    # Pad the document axis up to a multiple of db with all-False mask
+    # rows instead of shrinking db to a divisor of D: the old
+    # `while d % db: db -= 1` collapsed to db=1 (one grid program per
+    # document) whenever D was prime or coprime with doc_block. Pad rows
+    # sweep to nothing (live=False everywhere) and are sliced off below.
+    d_pad = ((d + db - 1) // db) * db
+    if d_pad != d:
+        pad = ((0, d_pad - d), (0, 0))
+        tokens = jnp.pad(tokens, pad)
+        mask = jnp.pad(mask, pad)
+        z = jnp.pad(z, pad)
+        uniforms = jnp.pad(uniforms, pad + ((0, 0),))
+    grid = (d_pad // db,)
 
     blk2 = lambda: pl.BlockSpec((db, l), lambda i: (i, 0))
     blk3 = lambda: pl.BlockSpec((db, l, 3), lambda i: (i, 0, 0))
 
-    return pl.pallas_call(
+    z_out, m_out = pl.pallas_call(
         functools.partial(_z_kernel, kk=kk, ww=w, ll=l, db=db),
         grid=grid,
         in_specs=[
@@ -173,8 +195,14 @@ def hdp_z_pallas(
             pl.BlockSpec(memory_space=pl.ANY),  # fpack (HBM)
             pl.BlockSpec(memory_space=pl.ANY),  # ipack (HBM)
         ],
-        out_specs=blk2(),
-        out_shape=jax.ShapeDtypeStruct((d, l), jnp.int32),
+        out_specs=[
+            blk2(),
+            pl.BlockSpec((db, kk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_pad, l), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, kk), jnp.int32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((kk,), jnp.int32),
             pltpu.VMEM((2, w), fpack.dtype),
@@ -183,3 +211,4 @@ def hdp_z_pallas(
         ],
         interpret=interpret,
     )(tokens, mask, z, uniforms, q_a, fpack, ipack)
+    return z_out[:d], m_out[:d]

@@ -78,7 +78,9 @@ def max_column_nnz(phi: jax.Array) -> jax.Array:
 def z_step_pallas(
     tokens, mask, z, phi, psi, alpha, uniforms, bucket, *, interpret=True
 ):
-    """Drop-in z-step: builds tables then runs the kernel (W = bucket)."""
+    """Drop-in z-step: builds tables then runs the kernel (W = bucket).
+
+    Returns ``(z_new, m)`` like every z-step (core/hdp.py docstring)."""
     q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
     return hdp_z_pallas(
         tokens, mask, z, uniforms, q_a, fpack, ipack,
@@ -89,7 +91,8 @@ def z_step_pallas(
 def z_step_ref(
     tokens, mask, z, phi, psi, alpha, uniforms, bucket
 ):
-    """Same math via the pure-jnp oracle (bitwise-identical to the kernel)."""
+    """Same math via the pure-jnp oracle (bitwise-identical to the kernel);
+    returns ``(z_new, m)``."""
     q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
     return hdp_z_ref(
         tokens, mask, z, uniforms, q_a, fpack, ipack, kk=phi.shape[0]

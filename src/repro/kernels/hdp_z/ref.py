@@ -2,7 +2,9 @@
 
 Identical math over the identical word-sparse tables consuming the
 identical uniforms — tests assert *bitwise* equality of the sampled z
-against the kernel in interpret mode.
+(and of the emitted per-doc histogram m) against the kernel in
+interpret mode. Like every z-step, returns ``(z_new, m)`` with m the
+(D, K) sweep-carry histogram of z_new.
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ def hdp_z_ref(
     ipack: jax.Array,     # (V, 2, W) int32
     *,
     kk: int,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
     w = fpack.shape[-1]
 
     def doc_sweep(tok_d, msk_d, z_d, u_d):
@@ -66,7 +68,6 @@ def hdp_z_ref(
             m = m.at[k_new].add(jnp.where(live, 1, 0))
             return z_d.at[i].set(k_new), m
 
-        z_d, _ = jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
-        return z_d
+        return jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
 
     return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)

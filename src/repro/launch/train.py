@@ -154,7 +154,11 @@ def train_hdp(args):
     k_topics = args.topics
     v_pad = ((corpus.V + mesh.shape["model"] - 1) // mesh.shape["model"]
              ) * mesh.shape["model"]
-    cfg = H.HDPConfig(K=k_topics, V=v_pad, bucket=args.bucket,
+    # auto bucket: the sparse z-step needs bucket >= min(K, L) (enforced
+    # at sampler construction since the delta-stats PR).
+    bucket = (min(k_topics, corpus.max_len) if args.bucket is None
+              else args.bucket)
+    cfg = H.HDPConfig(K=k_topics, V=v_pad, bucket=bucket,
                       z_impl=args.z_impl, hist_cap=min(corpus.max_len, 256))
     sh = ShardedHDP(mesh, cfg)
     if args.stream:
@@ -213,7 +217,9 @@ def main():
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--topics", type=int, default=100)
-    ap.add_argument("--bucket", type=int, default=64)
+    ap.add_argument("--bucket", type=int, default=None,
+                    help="sparse z-step active-topic bucket; default "
+                         "min(topics, max doc length)")
     ap.add_argument("--z-impl", default="sparse")
     ap.add_argument("--stream", action="store_true",
                     help="sweep the corpus in fixed-shape blocks (bounded "

@@ -54,6 +54,11 @@ def _engine_step(snap, tokens, mask, z, seeds, sweeps, base_key, *,
     anything): the steady-state no-admissions variant skips the init
     uniforms + alias pass entirely instead of computing and discarding
     them every step.
+
+    Returns ``(z, m)`` — the sweep-emitted (B, K) per-slot histogram is
+    kept on the pool so retirement builds mixtures without recounting z
+    (bitwise-equal to ``doc_topic_counts(z)``, hence to the direct
+    fold-in path).
     """
     length = tokens.shape[1]
     if has_fresh:
@@ -82,6 +87,7 @@ class _Slots:
     sweeps: np.ndarray                    # (B,) int32
     req: list                             # (B,) Optional[request id]
     z: jax.Array                          # (B, L) int32, device-resident
+    m: Optional[jax.Array] = None         # (B, K) sweep-emitted histograms
     d_tokens: Optional[jax.Array] = None  # device twins (None = dirty)
     d_mask: Optional[jax.Array] = None
     d_seeds: Optional[jax.Array] = None
@@ -173,7 +179,7 @@ class ServeEngine:
         self._completed: dict[int, np.ndarray] = {}  # drained by run()
         self._next_rid = 0
         self.stats = EngineStats()
-        self._theta_fn = jax.jit(F.topic_mixture)
+        self._theta_fn = jax.jit(F.topic_mixture_from_m)
 
     # -- request lifecycle -------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -224,9 +230,10 @@ class ServeEngine:
                 if pool.req[s] is not None and pool.sweeps[s] >= self.burnin]
         if not done:
             return
-        d_mask = pool.device_batch()[1]  # masks the retiring docs saw
+        # mixtures from the last sweep's emitted histograms (pool.m is
+        # set by every step; retirement requires >= 1 sweep).
         theta = np.asarray(self._theta_fn(
-            pool.z, d_mask, self.snap.psi, self.snap.alpha,
+            pool.m, self.snap.psi, self.snap.alpha,
         ))
         now = time.monotonic()
         for s in done:
@@ -264,7 +271,7 @@ class ServeEngine:
             has_fresh = any(r is not None and pool.sweeps[s] == 0
                             for s, r in enumerate(pool.req))
             d_tokens, d_mask, d_seeds = pool.device_batch()
-            pool.z = _engine_step(
+            pool.z, pool.m = _engine_step(
                 self.snap, d_tokens, d_mask, pool.z, d_seeds,
                 jnp.asarray(pool.sweeps), self.base_key, impl=self.impl,
                 has_fresh=has_fresh,

@@ -72,14 +72,22 @@ def init_z(
     return jnp.where(mask, z0, 0).astype(jnp.int32)
 
 
+def topic_mixture_from_m(
+    m: jax.Array, psi: jax.Array, alpha: jax.Array,
+) -> jax.Array:
+    """Posterior-mean document mixture theta_d ∝ m_dk + alpha psi_k from
+    the sweep-emitted (D, K) histogram — no recount of z."""
+    theta = m.astype(jnp.float32) + alpha * psi[None, :]
+    return theta / jnp.sum(theta, axis=1, keepdims=True)
+
+
 def topic_mixture(
     z: jax.Array, mask: jax.Array, psi: jax.Array, alpha: jax.Array,
 ) -> jax.Array:
-    """Posterior-mean document mixture theta_d ∝ m_dk + alpha psi_k."""
+    """Mixture from raw assignments (recounts m; prefer
+    ``topic_mixture_from_m`` where a sweep already emitted m)."""
     k = psi.shape[0]
-    m = H.doc_topic_counts(z, mask, k).astype(jnp.float32)
-    theta = m + alpha * psi[None, :]
-    return theta / jnp.sum(theta, axis=1, keepdims=True)
+    return topic_mixture_from_m(H.doc_topic_counts(z, mask, k), psi, alpha)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "burnin", "return_z"))
@@ -98,9 +106,10 @@ def foldin_docs(
     u0 = sweep_uniforms(base_key, seeds, jnp.zeros_like(seeds), length)
     z = init_z(tokens, mask, u0, snap.fpack, snap.ipack)
 
-    def one_sweep(s, z):
+    def one_sweep(s, carry):
         # s is a traced sweep index — the program contains ONE sweep body
         # regardless of burnin (compile time does not scale with it).
+        z, _ = carry
         u = sweep_uniforms(
             base_key, seeds, jnp.broadcast_to(s, seeds.shape), length
         )
@@ -109,6 +118,12 @@ def foldin_docs(
             kk=snap.K,
         )
 
-    z = jax.lax.fori_loop(1, burnin + 1, one_sweep, z)
-    theta = topic_mixture(z, mask, snap.psi, snap.alpha)
+    if burnin >= 1:
+        # the mixture reuses the final sweep's emitted m — fold-in never
+        # recounts doc_topic_counts on its hot path.
+        m0 = jnp.zeros(tokens.shape[:1] + (snap.K,), jnp.int32)
+        z, m = jax.lax.fori_loop(1, burnin + 1, one_sweep, (z, m0))
+    else:
+        m = H.doc_topic_counts(z, mask, snap.K)
+    theta = topic_mixture_from_m(m, snap.psi, snap.alpha)
     return (theta, z) if return_z else theta

@@ -1,0 +1,202 @@
+"""Delta-sparse sufficient statistics: the z-step return contract.
+
+Every z-step emits ``(z_new, m)`` with m the sweep-carry per-document
+histogram, and drivers advance the topic-word statistic by the exact
+integer delta over changed tokens. These tests pin the two bitwise
+identities the whole delta scheme rests on,
+
+    n + delta_n(z_old, z_new)  ==  count_n(z_new)
+    emitted m                  ==  doc_topic_counts(z_new)
+
+across random corpora, masks, and all three z implementations, plus the
+streaming multi-block equivalence (delta-merged device n == recount over
+the final z blocks) and the bucket-capacity validation that replaces the
+old silent term-(b) mass drop. A hypothesis-powered generalization lives
+in tests/test_delta_stats_property.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hdp as H
+from repro.core.polya_urn import ppu_sample
+from repro.core.sharded import ShardedHDP
+from repro.core.streaming import StreamingHDP
+from repro.data.stream import ShardedCorpusStore
+from repro.data.synthetic import planted_topics_corpus
+from repro.kernels.hdp_z import ops as zops
+from repro.launch.mesh import make_host_mesh
+
+
+def make_problem(seed, k, v, d, l, rate=0.8):
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(rate, size=(k, v)).astype(np.int32)
+    phi, _ = ppu_sample(jax.random.key(seed + 1), jnp.asarray(n), 0.01)
+    psi = jnp.asarray(rng.dirichlet(np.ones(k)).astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, v, (d, l)).astype(np.int32))
+    mask = jnp.asarray(rng.random((d, l)) > 0.25)
+    z0 = jnp.asarray(rng.integers(0, k, (d, l)).astype(np.int32))
+    u = jax.random.uniform(jax.random.key(seed + 2), (d, l, 3))
+    return phi, psi, tokens, mask, z0, u
+
+
+def run_impl(impl, phi, psi, tokens, mask, z0, u, k, bucket):
+    if impl == "dense":
+        return H.z_step_dense(tokens, mask, z0, phi, psi, 0.3, u)
+    if impl == "sparse":
+        return H.z_step_sparse(tokens, mask, z0, phi, psi, 0.3, u, bucket)
+    return zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, bucket)
+
+
+@pytest.mark.parametrize("impl", ["dense", "sparse", "pallas"])
+@pytest.mark.parametrize("seed,k,v,d,l", [
+    (0, 8, 24, 6, 16),
+    (1, 16, 48, 9, 24),
+    (2, 24, 64, 5, 32),
+])
+def test_delta_bitwise_equals_recount(impl, seed, k, v, d, l):
+    phi, psi, tokens, mask, z0, u = make_problem(seed, k, v, d, l)
+    bucket = min(k, l)
+    z1, m = run_impl(impl, phi, psi, tokens, mask, z0, u, k, bucket)
+    n0 = H.count_n(z0, tokens, mask, k, v)
+    delta = H.delta_n(z0, z1, tokens, mask, k, v)
+    np.testing.assert_array_equal(
+        np.asarray(n0 + delta), np.asarray(H.count_n(z1, tokens, mask, k, v))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m), np.asarray(H.doc_topic_counts(z1, mask, k))
+    )
+    # deltas cancel over tokens: the corpus token count is conserved
+    assert int(np.asarray(delta).sum()) == 0
+
+
+def test_delta_composes_over_sweeps():
+    """Deltas accumulated over several chained sweeps still reconstruct
+    the recount exactly (associativity of the integer merge)."""
+    k, v = 12, 32
+    phi, psi, tokens, mask, z, _ = make_problem(5, k, v, 8, 20)
+    n = H.count_n(z, tokens, mask, k, v)
+    for s in range(4):
+        u = jax.random.uniform(jax.random.key(100 + s), tokens.shape + (3,))
+        z1, _ = H.z_step_dense(tokens, mask, z, phi, psi, 0.3, u)
+        n = n + H.delta_n(z, z1, tokens, mask, k, v)
+        z = z1
+    np.testing.assert_array_equal(
+        np.asarray(n), np.asarray(H.count_n(z, tokens, mask, k, v))
+    )
+
+
+@pytest.mark.parametrize("impl", ["sparse", "dense", "pallas"])
+def test_streaming_multiblock_delta_merge_exact(impl):
+    """The streaming driver's device-resident n (advanced purely by
+    per-block deltas) must equal a full recount over the final z blocks
+    after several multi-block iterations."""
+    rng = np.random.default_rng(3)
+    corpus, _ = planted_topics_corpus(rng, D=40, V=48, K_true=3,
+                                      doc_len=(10, 20))
+    mesh = make_host_mesh()
+    cfg = H.HDPConfig(K=12, V=48, bucket=12, z_impl=impl, hist_cap=32)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    assert store.num_blocks > 1
+    stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+    st = stream.init_state(jax.random.key(0))
+    for _ in range(2):
+        st = stream.iteration(st)
+    z_all = jnp.asarray(st.z_blocks.reshape(-1, store.max_len))
+    t_all = np.concatenate([b.tokens for b in store.blocks()])
+    m_all = np.concatenate([b.mask for b in store.blocks()])
+    n_re = H.count_n(z_all, jnp.asarray(t_all), jnp.asarray(m_all),
+                     cfg.K, cfg.V)
+    np.testing.assert_array_equal(np.asarray(n_re), np.asarray(st.n))
+    assert int(np.asarray(st.n).sum()) == corpus.num_tokens
+
+
+def _legacyize_ckpt(ckpt_dir):
+    """Rewrite the latest checkpoint to the pre-delta payload format:
+    n_run -> n_acc (the old partial-recount accumulator key)."""
+    import json
+    import os
+
+    from repro.train import checkpoint as CKPT
+
+    step = CKPT.latest_step(ckpt_dir)
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    os.rename(os.path.join(d, "n_run.npy"), os.path.join(d, "n_acc.npy"))
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    man["arrays"]["n_acc"] = man["arrays"].pop("n_run")
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f)
+
+
+def test_restore_legacy_predelta_checkpoints():
+    """Boundary checkpoints from the pre-delta format restore fine (their
+    accumulator is never read at cursor 0); mid-epoch ones are refused —
+    their n_acc held partial recounts, not the running statistic."""
+    import tempfile
+
+    rng = np.random.default_rng(2)
+    corpus, _ = planted_topics_corpus(rng, D=24, V=48, K_true=3,
+                                      doc_len=(10, 20))
+    mesh = make_host_mesh()
+    cfg = H.HDPConfig(K=12, V=48, bucket=12, z_impl="sparse", hist_cap=32)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+    st = stream.init_state(jax.random.key(0))
+    st = stream.iteration(st)
+
+    with tempfile.TemporaryDirectory() as d:
+        stream.save(d, st)
+        _legacyize_ckpt(d)
+        restored, kw = stream.restore(d)
+        assert kw == {}
+        np.testing.assert_array_equal(np.asarray(st.n), np.asarray(restored.n))
+
+    with tempfile.TemporaryDirectory() as d:
+        r = stream.iteration(st, ckpt_dir=d, stop_after_blocks=1)
+        assert r is None
+        _legacyize_ckpt(d)
+        with pytest.raises(ValueError, match="delta-statistics format"):
+            stream.restore(d)
+
+
+# -- bucket capacity validation (replaces the silent term-(b) drop) --------
+
+def test_bucket_overflow_rejected_at_init():
+    """Regression for the silent overflow: a sparse-z config whose bucket
+    cannot hold min(K, L) active topics used to drop term-(b) mass once a
+    document activated more than ``bucket`` topics; now it refuses to
+    construct."""
+    rng = np.random.default_rng(0)
+    corpus, _ = planted_topics_corpus(rng, D=8, V=32, K_true=3,
+                                      doc_len=(20, 30))
+    tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
+    cfg = H.HDPConfig(K=24, V=32, bucket=8, z_impl="sparse")
+    with pytest.raises(ValueError, match="bucket"):
+        H.init_state(jax.random.key(0), tokens, mask, cfg)
+
+
+def test_bucket_validation_scope():
+    """bucket >= min(K, L) passes; dense/pallas impls are exempt (no
+    active-topic bucket); the streaming driver validates at construction
+    against the store geometry."""
+    rng = np.random.default_rng(1)
+    corpus, _ = planted_topics_corpus(rng, D=8, V=32, K_true=3,
+                                      doc_len=(20, 30))
+    tokens, mask = jnp.asarray(corpus.tokens), jnp.asarray(corpus.mask)
+    l = tokens.shape[1]
+    # K <= bucket: fine even though L > bucket
+    ok = H.HDPConfig(K=8, V=32, bucket=8, z_impl="sparse")
+    H.init_state(jax.random.key(0), tokens, mask, ok)
+    # non-sparse impls don't use the bucket for term (b)
+    for impl in ("dense", "pallas"):
+        cfg = H.HDPConfig(K=24, V=32, bucket=8, z_impl=impl)
+        H.init_state(jax.random.key(0), tokens, mask, cfg)
+    mesh = make_host_mesh()
+    bad = H.HDPConfig(K=24, V=32, bucket=8, z_impl="sparse")
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=4)
+    assert store.max_len == l
+    with pytest.raises(ValueError, match="bucket"):
+        StreamingHDP(ShardedHDP(mesh, bad), store)

@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the delta-statistics identities.
+
+For arbitrary seeds and corpus geometries, and for every z execution
+strategy, the sweep-emitted histogram and the changed-token delta must
+reconstruct the recounted statistics bitwise:
+
+    n(z_old) + delta_n(z_old, z_new)  ==  count_n(z_new)
+    emitted m                         ==  doc_topic_counts(z_new)
+
+(The deterministic spot checks live in tests/test_delta_stats.py; this
+module is skipped when the optional ``hypothesis`` dep is absent.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdp as H
+from repro.core.polya_urn import ppu_sample
+from repro.kernels.hdp_z import ops as zops
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    impl=st.sampled_from(["dense", "sparse", "pallas"]),
+    d=st.integers(1, 7),
+    l=st.integers(1, 24),
+    k=st.integers(2, 20),
+    v=st.integers(4, 48),
+)
+def test_delta_and_emitted_m_reconstruct_recount(seed, impl, d, l, k, v):
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(0.8, size=(k, v)).astype(np.int32)
+    phi, _ = ppu_sample(jax.random.key(seed % 2**31), jnp.asarray(n), 0.01)
+    psi = jnp.asarray(rng.dirichlet(np.ones(k)).astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, v, (d, l)).astype(np.int32))
+    mask = jnp.asarray(rng.random((d, l)) > 0.3)
+    z0 = jnp.asarray(rng.integers(0, k, (d, l)).astype(np.int32))
+    u = jax.random.uniform(jax.random.key((seed + 1) % 2**31), (d, l, 3))
+    bucket = min(k, l)
+    if impl == "dense":
+        z1, m = H.z_step_dense(tokens, mask, z0, phi, psi, 0.3, u)
+    elif impl == "sparse":
+        z1, m = H.z_step_sparse(tokens, mask, z0, phi, psi, 0.3, u, bucket)
+    else:
+        z1, m = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u,
+                                   bucket)
+    n0 = H.count_n(z0, tokens, mask, k, v)
+    delta = H.delta_n(z0, z1, tokens, mask, k, v)
+    np.testing.assert_array_equal(
+        np.asarray(n0 + delta),
+        np.asarray(H.count_n(z1, tokens, mask, k, v)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m), np.asarray(H.doc_topic_counts(z1, mask, k))
+    )
+    # masked tokens never move
+    pad = ~np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(z1)[pad], np.asarray(z0)[pad])

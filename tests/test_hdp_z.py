@@ -1,4 +1,5 @@
-"""hdp_z Pallas kernel: bitwise oracle equality + exact conditionals."""
+"""hdp_z Pallas kernel: bitwise oracle equality (z and the emitted
+per-doc histogram m) + exact conditionals + doc-axis padding."""
 
 import jax
 import jax.numpy as jnp
@@ -29,14 +30,20 @@ def make_problem(rng, k, v, d, l, rate=0.8):
 def test_kernel_bitwise_equals_oracle(rng, k, v, d, l, w):
     n, phi, psi, tokens, mask, z0, u = make_problem(rng, k, v, d, l)
     assert int(zops.max_column_nnz(phi)) <= w
-    z_k = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, w)
-    z_r = zops.z_step_ref(tokens, mask, z0, phi, psi, 0.3, u, w)
+    z_k, m_k = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, w)
+    z_r, m_r = zops.z_step_ref(tokens, mask, z0, phi, psi, 0.3, u, w)
     np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+    # the emitted histogram IS the histogram of the sampled z
+    from repro.core import hdp as H
+    np.testing.assert_array_equal(
+        np.asarray(m_k), np.asarray(H.doc_topic_counts(z_k, mask, k))
+    )
 
 
 def test_kernel_respects_mask(rng):
     n, phi, psi, tokens, mask, z0, u = make_problem(rng, 8, 24, 4, 16)
-    z_k = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 8)
+    z_k, _ = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 8)
     pad = ~np.asarray(mask)
     np.testing.assert_array_equal(np.asarray(z_k)[pad], np.asarray(z0)[pad])
 
@@ -54,7 +61,8 @@ def test_kernel_single_site_conditional(rng):
     m = 20000
     u = jax.random.uniform(jax.random.key(4), (m, 1, 1, 3))
     zz = jax.vmap(
-        lambda uu: zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.5, uu, 12)
+        lambda uu: zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.5, uu,
+                                      12)[0]
     )(u)
     w = np.asarray(phi[:, 3]) * 0.5 * np.asarray(psi)
     target = w / w.sum()
@@ -77,12 +85,26 @@ def test_kernel_matches_dense_sweep_distribution(rng):
     m = 12000
     u = jax.random.uniform(jax.random.key(6), (m, d, l, 3))
     z_kern = jax.vmap(
-        lambda uu: zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.4, uu, k)
+        lambda uu: zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.4, uu,
+                                      k)[0]
     )(u)
     z_dense = jax.vmap(
-        lambda uu: z_step_dense(tokens, mask, z0, phi, psi, 0.4, uu)
+        lambda uu: z_step_dense(tokens, mask, z0, phi, psi, 0.4, uu)[0]
     )(u)
     for pos in range(l):
         fk = np.bincount(np.asarray(z_kern)[:, 0, pos], minlength=k) / m
         fd = np.bincount(np.asarray(z_dense)[:, 0, pos], minlength=k) / m
         np.testing.assert_allclose(fk, fd, atol=0.025)
+
+
+@pytest.mark.parametrize("d", [3, 5, 7, 11, 13])
+def test_kernel_doc_padding_matches_oracle(rng, d):
+    """Document counts prime/coprime with doc_block must not degrade the
+    grid to db=1: the padded kernel stays bitwise-equal to the oracle at
+    the default doc_block for any D."""
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, 8, 24, d, 16)
+    z_k, m_k = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 8)
+    z_r, m_r = zops.z_step_ref(tokens, mask, z0, phi, psi, 0.3, u, 8)
+    assert z_k.shape == (d, 16)
+    np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))

@@ -43,14 +43,24 @@ def test_all_impls_bitwise_equal(k, v, w, seed):
     # canonical-map precondition: tables cover each word's full support
     assert int(zops.max_column_nnz(phi)) <= w, "raise bucket for this config"
     q_a, fpack, ipack = C.build_tables(phi, psi, 0.3, w)
-    zs = {
-        impl: np.asarray(C.z_step_conformant(
+    out = {
+        impl: C.z_step_conformant(
             impl, tokens, mask, z0, u, q_a, fpack, ipack, kk=k
-        ))
+        )
         for impl in ("dense", "sparse", "pallas")
     }
+    zs = {impl: np.asarray(z) for impl, (z, _) in out.items()}
+    ms = {impl: np.asarray(m) for impl, (_, m) in out.items()}
     np.testing.assert_array_equal(zs["dense"], zs["sparse"])
     np.testing.assert_array_equal(zs["sparse"], zs["pallas"])
+    # the emitted histograms agree bitwise too, and match a recount
+    np.testing.assert_array_equal(ms["dense"], ms["sparse"])
+    np.testing.assert_array_equal(ms["sparse"], ms["pallas"])
+    from repro.core import hdp as H
+    np.testing.assert_array_equal(
+        ms["dense"],
+        np.asarray(H.doc_topic_counts(jnp.asarray(zs["dense"]), mask, k)),
+    )
     # and the sweep actually moved something (not vacuous equality)
     moved = (zs["dense"] != np.asarray(z0)) & np.asarray(mask)
     assert moved.any()
@@ -62,7 +72,7 @@ def test_conformant_impl_respects_mask(impl):
     q_a, fpack, ipack = C.build_tables(phi, psi, 0.3, 16)
     z = np.asarray(C.z_step_conformant(
         impl, tokens, mask, z0, u, q_a, fpack, ipack, kk=16
-    ))
+    )[0])
     pad = ~np.asarray(mask)
     np.testing.assert_array_equal(z[pad], np.asarray(z0)[pad])
 
