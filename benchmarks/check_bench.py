@@ -1,8 +1,10 @@
 """Warn-only bench regression gate for the committed BENCH_hdp.json.
 
-Compares a fresh ``perf_hdp --stream`` artifact against the committed
-baseline, record by record (matched on mode / z_impl / block_docs), and
-flags tokens_per_s regressions beyond ``--threshold`` (default 20%).
+Compares a fresh ``perf_hdp --stream`` / ``--serve`` / ``--serve-fleet``
+artifact against the committed baseline, record by record (matched on
+mode / impl / block geometry / workers / slots), and flags throughput
+regressions beyond ``--threshold`` (default 20%) — ``tokens_per_s`` for
+streaming records, ``docs_per_s`` for serving records.
 
 Warn-only by design: CI runners have noisy, heterogeneous CPUs, so a
 hard gate would flake — the step prints GitHub-annotation warnings and
@@ -18,23 +20,34 @@ import sys
 
 
 def _key(rec):
-    return (rec.get("mode"), rec.get("z_impl"), rec.get("block_docs"))
+    return (rec.get("mode"), rec.get("z_impl") or rec.get("impl"),
+            rec.get("block_docs"), rec.get("workers"), rec.get("slots"))
+
+
+def _metric(rec):
+    """(name, value) of the record's throughput metric: tokens/s for
+    training-side records, docs/s for serving-side ones."""
+    for name in ("tokens_per_s", "docs_per_s"):
+        if name in rec:
+            return name, rec[name]
+    return None, None
 
 
 def compare(fresh, baseline, threshold):
-    base_by_key = {_key(r): r for r in baseline if "tokens_per_s" in r}
+    base_by_key = {_key(r): r for r in baseline if _metric(r)[0]}
     regressions = []
     for rec in fresh:
-        if "tokens_per_s" not in rec:
+        name, val = _metric(rec)
+        if name is None:
             continue
         base = base_by_key.get(_key(rec))
-        if base is None:
+        if base is None or name not in base:
             print(f"{_key(rec)}: no baseline record (new config?) — "
-                  f"{rec['tokens_per_s']:,} tok/s")
+                  f"{val:,} {name}")
             continue
-        ratio = rec["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
-        line = (f"{_key(rec)}: {rec['tokens_per_s']:,.0f} tok/s vs baseline "
-                f"{base['tokens_per_s']:,.0f} ({ratio:.2f}x)")
+        ratio = val / max(base[name], 1e-9)
+        line = (f"{_key(rec)}: {val:,.0f} {name} vs baseline "
+                f"{base[name]:,.0f} ({ratio:.2f}x)")
         if ratio < 1.0 - threshold:
             regressions.append(line)
             print(f"::warning title=bench regression::{line}")

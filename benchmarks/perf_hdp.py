@@ -132,6 +132,63 @@ def serve_bench(args):
             json.dump(results, f, indent=1)
 
 
+def serve_fleet_bench(args):
+    """Fleet scaling: aggregate docs/s of the replicated serving fleet
+    across worker counts on the default synthetic config (one trained
+    snapshot, pinned). On CPU, workers are threads whose XLA sweeps
+    release the GIL, so docs/s should scale near-linearly up to the core
+    count; the committed BENCH_hdp.json records the trajectory and
+    check_bench flags >20% regressions warn-only in CI."""
+    import jax
+    import numpy as np
+
+    from repro.launch import serve_hdp as SH
+    from repro.serve.fleet import ServeFleet
+
+    targs = argparse.Namespace(
+        seed=0, eval_docs=16, train_docs=args.train_docs,
+        train_iters=args.train_iters, topics=args.topics,
+        vocab=args.vocab, compact=False, export=None,
+    )
+    snap, _ = SH.train_tiny_snapshot(targs)
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(0, snap.V, size=int(n)).astype(np.int32)
+            for n in rng.integers(8, 48, size=args.requests)]
+    results = []
+    for workers in args.workers:
+        with ServeFleet(
+            snap, workers=workers, slots=args.fleet_slots,
+            burnin=args.burnin, impl=args.z_impl, buckets=(32, 64),
+            base_key=jax.random.key(0),
+        ) as fleet:
+            for doc in docs:  # warm-up: compile + first admissions
+                fleet.submit(doc)
+            fleet.run()
+            # percentiles must describe the timed pass only — warm-up
+            # completions include XLA compile time.
+            fleet.router.reset_latencies()
+            t0 = time.time()
+            for i, doc in enumerate(docs):
+                fleet.submit(doc, seed=10_000 + i)
+            fleet.run()
+            wall = time.time() - t0
+            s = fleet.stats_summary()
+        rec = {
+            "mode": "serve_fleet", "impl": args.z_impl,
+            "workers": workers, "slots": args.fleet_slots,
+            "burnin": args.burnin, "requests": args.requests,
+            "K": snap.K, "V": snap.V, "W": snap.W,
+            "docs_per_s": round(args.requests / wall, 2),
+            "p50_latency_ms": s["p50_latency_ms"],
+            "p95_latency_ms": s["p95_latency_ms"],
+        }
+        print(f"workers={workers}: {rec['docs_per_s']} docs/s "
+              f"(p95 {rec['p95_latency_ms']}ms)", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="hdp-pubmed")
@@ -145,6 +202,9 @@ def main():
                     help="benchmark the streaming minibatch driver")
     ap.add_argument("--serve", action="store_true",
                     help="benchmark the fold-in serving engine")
+    ap.add_argument("--serve-fleet", action="store_true",
+                    help="benchmark replicated-fleet docs/s scaling "
+                         "across --workers counts")
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--topics", type=int, default=100)
@@ -155,6 +215,11 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--burnin", type=int, default=8)
     ap.add_argument("--slots", type=int, nargs="+", default=[4, 16])
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4],
+                    help="fleet worker counts (--serve-fleet)")
+    ap.add_argument("--fleet-slots", type=int, default=32,
+                    help="slots per fleet worker (--serve-fleet); wide "
+                         "batches amortize per-step dispatch")
     ap.add_argument("--train-docs", type=int, default=64)
     ap.add_argument("--train-iters", type=int, default=15)
     ap.add_argument("--vocab", type=int, default=64)
@@ -162,7 +227,10 @@ def main():
     if args.out is None:
         args.out = ("BENCH_hdp.json" if args.stream else
                     "BENCH_hdp_serve.json" if args.serve else
+                    "BENCH_hdp_fleet.json" if args.serve_fleet else
                     "BENCH_hdp_dryrun.json")
+    if args.serve_fleet:
+        return serve_fleet_bench(args)
     if args.serve:
         return serve_bench(args)
     if args.stream:

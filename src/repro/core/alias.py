@@ -6,10 +6,28 @@ rebuilt once per Gibbs iteration (Section 2.5).  Because Phi and Psi are
 *fixed* during the z-step under partial collapsing, the table is exact and
 no Metropolis-Hastings correction is required (unlike Li et al. 2014).
 
-Construction is the two-stack (small/large) Vose algorithm expressed as a
-``lax.scan`` of K O(1) steps, ``vmap``-ed over word types: K sequential
-steps each processing a full vocab-shard lane vector, which is the
-TPU-friendly layout (see DESIGN.md section 3).
+Construction is a prefix-sum partition of the small/large entries
+(``_alias_build_row_psum``): after one ascending sort, the sequential
+Vose pairing is recovered in closed form from cumulative small deficits
+D and cumulative large surpluses U — small m's donor is the first large
+whose running surplus covers D[m-1], and large j demotes at the first
+small whose running deficit exceeds U[j] (``searchsorted`` both ways).
+Depth is O(log K) (sort + cumsum + binary search) instead of the K
+sequential ``lax.scan`` steps of the two-stack formulation, which had
+become the dominant fixed per-iteration cost at small K* (ROADMAP).
+
+Bitwise note (conformance rationale): the prefix-sum build reproduces
+the *pairing structure* of the retired sequential scan exactly in exact
+arithmetic (the telescoping surplus/deficit identity), but computes the
+residual probabilities from cumulative sums rather than a chained
+left-to-right subtraction, so low-order float bits — and, at exact fp
+ties, the occasional pairing — may differ from tables built by older
+revisions. Every conformance surface in this repo is *relative*
+(dense/sparse/pallas z-steps against shared tables, streaming against
+monolithic, engine against direct fold-in) and is unaffected; there are
+no stored golden tables. The sequential scan is retained below as
+``_alias_build_row_scan`` — the reference the equivalence test in
+tests/test_alias.py checks the prefix-sum build against.
 
 Sampling is deterministic given two uniforms: ``slot = floor(u1 * K)``,
 then ``select(u2 < prob[slot], slot, alias[slot])`` — two gathers and a
@@ -25,16 +43,95 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _alias_build_row(p: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Build one alias table from an unnormalized weight vector ``p`` (K,).
+def _normalized(p: jax.Array) -> jax.Array:
+    """q = p / mean(p): the alias construction's working scale, where
+    "small" entries sit below 1. Guard all-zero rows (e.g. padded vocab
+    entries): fall back to uniform."""
+    total = jnp.sum(p)
+    return jnp.where(
+        total > 0, p / jnp.maximum(total, 1e-30) * p.shape[0],
+        jnp.ones_like(p),
+    )
 
-    Returns (prob, alias): prob[j] is the probability that slot j keeps its
-    own index, alias[j] the donor index otherwise.
+
+def _alias_build_row_psum(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Build one alias table from an unnormalized weight vector ``p`` (K,)
+    via a prefix-sum partition of the small/large entries.
+
+    Returns (prob, alias): prob[j] is the probability that slot j keeps
+    its own index, alias[j] the donor index otherwise.
+
+    After the ascending sort, positions [0, nS) are small (q < 1) and
+    [nS, K) are large; larges are consumed from the top down, exactly as
+    the sequential two-stack scan did. The scan's pairing is then a
+    closed form in two monotone prefix sums — D[m] (cumulative small
+    deficits 1-q) and U[j] (cumulative large surpluses q-1, descending
+    consumption order) — because demoted-large residual deficits
+    telescope: by the time large j has demoted, the sorted smalls it and
+    its predecessors absorbed carry total deficit exactly U[j]. Hence
+
+      * small m's donor is the first large j with U[j] >= D[m-1]
+        (the large active when m is consumed);
+      * large j demotes at the first small m* with D[m*] > U[j]
+        (strict: a large drained to exactly 1.0 stays large), with
+        residual prob 1 + U[j] - D[m*] and alias the next large down;
+      * no such m* => the large keeps prob 1; no such j (total deficit
+        exceeding total surplus by fp residue) => the small keeps its
+        own slot, as in the sequential scan.
     """
     k = p.shape[0]
-    total = jnp.sum(p)
-    # Guard all-zero rows (e.g. padded vocab entries): fall back to uniform.
-    q = jnp.where(total > 0, p / jnp.maximum(total, 1e-30) * k, jnp.ones_like(p))
+    q = _normalized(p)
+    order = jnp.argsort(q)
+    qs = q[order]                                   # ascending
+    pos = jnp.arange(k, dtype=jnp.int32)
+    small = qs < 1.0
+    ns = jnp.sum(small.astype(jnp.int32))
+    nl = k - ns
+
+    d = jnp.where(small, 1.0 - qs, 0.0)
+    dcum = jnp.cumsum(d)                            # D[m], increasing on smalls
+    dprev = dcum - d                                # D[m-1] (0 at m = 0)
+    # larges in consumption order: descending sorted position k-1-j.
+    u = jnp.where(pos < nl, qs[::-1] - 1.0, 0.0)
+    ucum = jnp.cumsum(u)                            # U[j], nondecreasing
+    upad = jnp.where(pos < nl, ucum, jnp.inf)       # stays sorted past nl
+
+    # smalls: donor = first large whose running surplus covers D[m-1].
+    j_small = jnp.searchsorted(upad, dprev, side="left").astype(jnp.int32)
+    has_donor = small & (j_small < nl)
+    alias_small = jnp.where(has_donor, k - 1 - j_small, pos)
+
+    # larges: demoting small = first m with D[m] > U[j] (strict).
+    dpad = jnp.where(small, dcum, jnp.inf)          # stays sorted past ns
+    j_of_pos = k - 1 - pos                          # consumption index
+    u_here = ucum[j_of_pos]
+    mstar = jnp.searchsorted(dpad, u_here, side="right").astype(jnp.int32)
+    demoted = (~small) & (mstar < ns)
+    resid = 1.0 + u_here - dcum[jnp.minimum(mstar, k - 1)]
+    has_next = demoted & (pos - 1 >= ns)            # next large down exists
+
+    prob_sorted = jnp.where(small, qs, jnp.where(demoted, resid, 1.0))
+    alias_sorted = jnp.where(
+        small, alias_small, jnp.where(has_next, pos - 1, pos)
+    )
+    prob_sorted = jnp.clip(prob_sorted, 0.0, 1.0)
+
+    # Un-sort back to original topic indices.
+    inv = jnp.zeros((k,), dtype=jnp.int32).at[order].set(pos)
+    prob = prob_sorted[inv]
+    alias = order[alias_sorted[inv]]
+    return prob.astype(jnp.float32), alias.astype(jnp.int32)
+
+
+def _alias_build_row_scan(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reference sequential construction: the two-stack Vose algorithm as
+    a ``lax.scan`` of K O(1) steps. Retired from the production path by
+    the prefix-sum partition above (same pairing in exact arithmetic,
+    O(log K) depth instead of K sequential steps); kept as the oracle the
+    equivalence test pins the prefix-sum build against.
+    """
+    k = p.shape[0]
+    q = _normalized(p)
 
     # Sort ascending; positions [0, boundary) are "small" (q < 1).
     order = jnp.argsort(q)
@@ -120,13 +217,22 @@ def _alias_build_row(p: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 @functools.partial(jax.jit)
 def alias_build(p: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Vectorized alias build.
+    """Vectorized alias build (prefix-sum partition construction).
 
     p: (..., K) unnormalized weights — one table per leading index.
     Returns (prob, alias) with the same leading shape.
     """
     flat = p.reshape((-1, p.shape[-1]))
-    prob, alias = jax.vmap(_alias_build_row)(flat)
+    prob, alias = jax.vmap(_alias_build_row_psum)(flat)
+    return prob.reshape(p.shape), alias.reshape(p.shape)
+
+
+@functools.partial(jax.jit)
+def alias_build_scan(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vectorized alias build via the reference sequential scan (for
+    equivalence tests and as a fallback; production uses alias_build)."""
+    flat = p.reshape((-1, p.shape[-1]))
+    prob, alias = jax.vmap(_alias_build_row_scan)(flat)
     return prob.reshape(p.shape), alias.reshape(p.shape)
 
 

@@ -355,7 +355,25 @@ class StreamingHDP:
         ckpt_dir: Optional[str] = None,
         ckpt_every_iters: Optional[int] = None,
         ckpt_every_blocks: Optional[int] = None,
+        registry=None, publish_every_iters: Optional[int] = None,
+        publish_w: Optional[int] = None, publish_compact: bool = False,
+        publish_keep: Optional[int] = None,
     ) -> StreamingState:
+        """Drive ``iters`` Gibbs iterations; optionally checkpoint and
+        periodically publish serving snapshots.
+
+        ``registry`` (a ``serve.registry.SnapshotRegistry``) plus
+        ``publish_every_iters`` turns a live training run into a fleet
+        feed: every N completed iterations the current (Phi, Psi) is
+        distilled and atomically published, and fleet workers watching
+        the registry hot-swap to it between engine steps. Publishing is
+        a posterior-sample export, not a checkpoint — it never perturbs
+        the chain (pure read of the state)."""
+        if bool(publish_every_iters) != (registry is not None):
+            raise ValueError(
+                "registry and publish_every_iters go together: passing "
+                "only one would silently never publish"
+            )
         for _ in range(iters):
             state = self.iteration(
                 state, ckpt_dir=ckpt_dir, ckpt_every_blocks=ckpt_every_blocks
@@ -363,19 +381,36 @@ class StreamingHDP:
             if (ckpt_dir and ckpt_every_iters
                     and int(state.it) % ckpt_every_iters == 0):
                 self.save(ckpt_dir, state)
+            if (registry is not None and publish_every_iters
+                    and int(state.it) % publish_every_iters == 0):
+                self.export_snapshot(
+                    registry, state, w=publish_w, compact=publish_compact,
+                    keep=publish_keep,
+                )
         return state
 
     # -- snapshot export ---------------------------------------------------
-    def export_snapshot(self, path: str, state: StreamingState, *,
-                        w: Optional[int] = None, compact: bool = False):
+    def export_snapshot(self, dest, state: StreamingState, *,
+                        w: Optional[int] = None, compact: bool = False,
+                        keep: Optional[int] = None):
         """Distill the current model into a serving snapshot
         (serve/snapshot.py): Phi/Psi plus the word-sparse alias tables
         built once, valid for the snapshot's lifetime because serving
-        never resamples Phi."""
+        never resamples Phi.
+
+        ``dest`` is either a plain snapshot directory path (single
+        artifact, replaced in place) or a ``SnapshotRegistry`` — then the
+        snapshot is atomically *published* as a new immutable version
+        (``keep`` bounds registry retention), which is the hook
+        ``run(publish_every_iters=...)`` drives to feed a serving fleet
+        from a live run."""
         from repro.serve import snapshot as SNAP
 
         snap = SNAP.snapshot_from_state(state, self.cfg, w=w, compact=compact)
-        SNAP.save(path, snap)
+        if hasattr(dest, "publish"):
+            dest.publish(snap, keep=keep)
+        else:
+            SNAP.save(dest, snap)
         return snap
 
     # -- checkpointing ----------------------------------------------------

@@ -124,7 +124,75 @@ class ShardedCorpusStore:
                    doc_multiple=doc_multiple)
 
 
-class BlockWriteback:
+class AsyncStage:
+    """Bounded single-worker pipeline stage: the double-buffering idiom
+    shared by the streaming D2H write-back (``BlockWriteback``) and the
+    serve engines' admission packer (serve/engine.py).
+
+    ``submit(item)`` enqueues work; a daemon thread runs ``fn(item)`` in
+    submission order. The bounded queue (``depth``) backpressures the
+    producer so at most ``depth`` items are in flight. ``flush()`` waits
+    until everything submitted so far has been processed; ``close()``
+    drains and stops the worker (idempotent). Worker errors are captured
+    and re-raised on the next flush/close — after an error, queued and
+    subsequent items are dropped unprocessed rather than run against
+    possibly-corrupt state.
+    """
+
+    _DONE = object()
+
+    def __init__(self, fn, *, depth: int = 2, name: str = "AsyncStage"):
+        self._fn = fn
+        self._name = name
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name=name
+        )
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._DONE:
+                    return
+                if self._err is None:
+                    self._fn(item)
+            except BaseException as e:  # surfaced on flush/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, item):
+        self._q.put(item)
+
+    def flush(self):
+        self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        """Drain outstanding work and stop the worker (idempotent)."""
+        if self._thread.is_alive():
+            self._q.put(self._DONE)
+            self._thread.join(timeout=600)
+            if self._thread.is_alive():
+                # never return while the worker may still be mutating the
+                # stage's target — silently-torn state is worse than an
+                # exception.
+                raise RuntimeError(
+                    f"{self._name} worker failed to drain within 600s "
+                    "(wedged device transfer?)"
+                )
+        self._raise_pending()
+
+
+class BlockWriteback(AsyncStage):
     """Bounded async device->host write-back of swept blocks.
 
     ``submit(index, device_array)`` enqueues a just-dispatched (possibly
@@ -140,55 +208,14 @@ class BlockWriteback:
     on the next flush/close.
     """
 
-    _DONE = object()
-
     def __init__(self, sink, *, depth: int = 2):
-        self._sink = sink
-        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
-        self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        super().__init__(
+            lambda item: sink(item[0], np.asarray(item[1])),
+            depth=depth, name="BlockWriteback",
+        )
 
-    def _worker(self):
-        while True:
-            item = self._q.get()
-            try:
-                if item is self._DONE:
-                    return
-                if self._err is None:
-                    b, arr = item
-                    self._sink(b, np.asarray(arr))
-            except BaseException as e:  # surfaced on flush/close
-                self._err = e
-            finally:
-                self._q.task_done()
-
-    def _raise_pending(self):
-        if self._err is not None:
-            err, self._err = self._err, None
-            raise err
-
-    def submit(self, index: int, device_array):
-        self._q.put((index, device_array))
-
-    def flush(self):
-        self._q.join()
-        self._raise_pending()
-
-    def close(self):
-        """Drain outstanding writes and stop the worker (idempotent)."""
-        if self._thread.is_alive():
-            self._q.put(self._DONE)
-            self._thread.join(timeout=600)
-            if self._thread.is_alive():
-                # never return while the worker may still be mutating the
-                # sink's target — a silently-torn z slab is worse than an
-                # exception.
-                raise RuntimeError(
-                    "BlockWriteback worker failed to drain within 600s "
-                    "(wedged device transfer?)"
-                )
-        self._raise_pending()
+    def submit(self, index: int, device_array):  # type: ignore[override]
+        super().submit((index, device_array))
 
 
 class BlockPrefetcher:

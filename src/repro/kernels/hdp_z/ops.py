@@ -33,7 +33,7 @@ def build_word_sparse_tables(
     phi entries beyond W are dropped (checked by ``max_column_nnz``).
 
     ``compact=True`` packs fpack in bf16 and ipack in int16 (valid for
-    K* < 32768), halving the table broadcast — the §Perf "compact tables"
+    K* <= 32768, enforced), halving the table broadcast — the §Perf "compact tables"
     variant. bf16 phi values only perturb sampling weights ~1e-3
     relatively, within the PPU approximation's own error.
 
@@ -44,6 +44,13 @@ def build_word_sparse_tables(
     sweep (zero slots add exactly 0.0), which is what the z-step
     conformance contract (core/conformance.py) relies on.
     """
+    if compact and phi.shape[0] > 2**15:
+        # int16 topic ids (0..K-1) would silently wrap past 32767,
+        # aliasing high topics onto low ones — refuse at trace time
+        # (K is static). K == 32768 is the last legal size.
+        raise ValueError(
+            f"compact int16 topic ids need K <= 32768, got K={phi.shape[0]}"
+        )
     pt = phi.T  # (V, K)
     w = min(w, phi.shape[0])
     vals, idx = jax.lax.top_k(pt, w)

@@ -1,17 +1,26 @@
-"""HDP topic-inference serving driver: snapshot -> engine -> stats.
+"""HDP topic-inference serving driver: snapshot -> engine/fleet -> stats.
 
 Loads (or, with --smoke/--train-iters, trains and exports) a frozen
 ``ModelSnapshot``, runs a query workload through the continuous-batching
-engine, and reports docs/s, latency percentiles, and held-out fold-in
-perplexity as JSON — the serving counterpart of launch/train.py.
+engine — or, with ``--workers``, through a replicated ``ServeFleet`` —
+and reports docs/s, latency percentiles, and held-out fold-in perplexity
+as JSON — the serving counterpart of launch/train.py.
 
   # end-to-end from nothing (tiny model, 16 queries):
   PYTHONPATH=src python -m repro.launch.serve_hdp --smoke
+
+  # the same through a 2-worker fleet (the CI fleet smoke):
+  PYTHONPATH=src python -m repro.launch.serve_hdp --smoke --workers 2
 
   # serve an exported snapshot against a synthetic AP-like workload:
   PYTHONPATH=src python -m repro.launch.serve_hdp \
       --snapshot /tmp/snap --corpus ap --scale 0.01 --requests 256 \
       --slots 32 --burnin 16 --impl sparse
+
+  # serve the latest version of a snapshot registry with hot-swap on
+  # publish and 3-sample posterior ensembling:
+  PYTHONPATH=src python -m repro.launch.serve_hdp \
+      --registry /tmp/hdp_reg --workers 4 --watch-registry --ensemble 3
 """
 
 from __future__ import annotations
@@ -100,22 +109,56 @@ def make_workload(args, snap: SNAP.ModelSnapshot, heldout):
     return docs, np.asarray(ev_tokens), np.asarray(ev_mask), heldout is None
 
 
+def _serve_fleet(args, snap, docs):
+    """Route the workload through a replicated ServeFleet. Serves from
+    --registry when given (publishing a freshly trained snapshot into it
+    first), else from the pinned snapshot."""
+    from repro.serve.fleet import ServeFleet
+    from repro.serve.registry import SnapshotRegistry
+
+    source = snap
+    if args.registry:
+        reg = SnapshotRegistry(args.registry)
+        if args.smoke or args.train_iters:
+            v = reg.publish(snap)
+            print(f"published trained snapshot as v{v} in {args.registry}")
+        source = reg
+    with ServeFleet(
+        source, workers=args.workers, slots=args.slots, burnin=args.burnin,
+        impl=args.impl, buckets=tuple(args.buckets),
+        base_key=jax.random.key(args.seed), ensemble=args.ensemble,
+        watch_registry=args.watch_registry,
+    ) as fleet:
+        rids = [fleet.submit(doc) for doc in docs]
+        mixtures = fleet.run()
+        stats = fleet.stats_summary()
+    return rids, mixtures, stats
+
+
 def serve(args) -> dict:
     heldout = None
     if args.snapshot and not args.smoke and not args.train_iters:
         snap = SNAP.load(args.snapshot)
+    elif args.registry and not args.smoke and not args.train_iters:
+        from repro.serve.registry import SnapshotRegistry
+
+        snap = SnapshotRegistry(args.registry).load()
     else:
         snap, heldout = train_tiny_snapshot(args)
     print(f"snapshot: K={snap.K} V={snap.V} W={snap.W} "
           f"compact={snap.compact} ({snap.nbytes()/1e6:.2f} MB)")
 
     docs, ev_tokens, ev_mask, ev_synth = make_workload(args, snap, heldout)
-    engine = ServeEngine(
-        snap, slots=args.slots, burnin=args.burnin, impl=args.impl,
-        buckets=tuple(args.buckets), base_key=jax.random.key(args.seed),
-    )
-    rids = [engine.submit(doc) for doc in docs]
-    mixtures = engine.run()
+    if args.workers:
+        rids, mixtures, fleet_stats = _serve_fleet(args, snap, docs)
+    else:
+        engine = ServeEngine(
+            snap, slots=args.slots, burnin=args.burnin, impl=args.impl,
+            buckets=tuple(args.buckets), base_key=jax.random.key(args.seed),
+        )
+        rids = [engine.submit(doc) for doc in docs]
+        mixtures = engine.run()
+        fleet_stats = None
 
     # every accepted request must come back as a valid mixture
     assert len(mixtures) == len(rids), (len(mixtures), len(rids))
@@ -140,7 +183,8 @@ def serve(args) -> dict:
         "requests": len(rids),
         "burnin": args.burnin,
         "slots": args.slots,
-        **engine.stats.summary(),
+        **(fleet_stats if fleet_stats is not None
+           else engine.stats.summary()),
         "heldout_perplexity": round(perplexity, 3),
         # True when no genuinely held-out docs were available and the
         # eval batch is uniform noise — the perplexity is then only a
@@ -171,6 +215,19 @@ def main():
     ap.add_argument("--burnin", type=int, default=8)
     ap.add_argument("--buckets", type=int, nargs="+",
                     default=list(DEFAULT_BUCKETS))
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through a replicated fleet of N engine "
+                         "workers (0 = single engine)")
+    ap.add_argument("--ensemble", type=int, default=1,
+                    help="fan each request out to the E newest registry "
+                         "versions and average mixtures (needs --registry)")
+    ap.add_argument("--registry", default=None,
+                    help="snapshot registry dir to serve from (latest "
+                         "version; freshly trained snapshots are "
+                         "published into it)")
+    ap.add_argument("--watch-registry", action="store_true",
+                    help="hot-swap fleet workers onto newly published "
+                         "registry versions between engine steps")
     ap.add_argument("--corpus", default=None,
                     help="ap|cgcbib|neurips|pubmed synthetic query workload")
     ap.add_argument("--scale", type=float, default=0.01)
@@ -188,8 +245,13 @@ def main():
     args = ap.parse_args()
     if args.smoke and not args.train_iters:
         args.train_iters = 20
-    if not args.snapshot and not args.train_iters:
-        ap.error("need --snapshot, --smoke, or --train-iters")
+    if not args.snapshot and not args.registry and not args.train_iters:
+        ap.error("need --snapshot, --registry, --smoke, or --train-iters")
+    if (args.watch_registry or args.ensemble > 1) and not args.workers:
+        ap.error("--watch-registry/--ensemble serve through the fleet: "
+                 "pass --workers N")
+    if (args.watch_registry or args.ensemble > 1) and not args.registry:
+        ap.error("--watch-registry/--ensemble need --registry")
     serve(args)
 
 

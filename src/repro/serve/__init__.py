@@ -12,6 +12,16 @@ deployable artifact and answers topic-inference queries against it:
                     topic mixtures (dense/sparse/pallas, bitwise-equal);
   * ``engine``    — continuous-batching request engine over fixed-shape
                     length-bucketed slots;
+  * ``registry``  — versioned on-disk snapshot registry with atomic
+                    publish: the seam between a live training run
+                    (``StreamingHDP.run(publish_every_iters=...)``) and
+                    a serving fleet;
+  * ``router``    — async admission: bounded shared queue with
+                    backpressure, bucket-aware dispatch, ensemble
+                    fan-out/aggregation;
+  * ``fleet``     — N replicated engines (thread-per-worker, one per
+                    device) with registry hot-swap and posterior-
+                    ensemble inference;
   * ``eval``      — held-out document-completion perplexity.
 
 The partial collapsing of the source paper is what makes this layer
@@ -22,3 +32,15 @@ token against read-only tables.
 """
 
 from repro.serve.snapshot import ModelSnapshot, build_snapshot  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: fleet/registry pull in threading machinery callers of the
+    # plain snapshot/fold-in API never need.
+    if name == "SnapshotRegistry":
+        from repro.serve.registry import SnapshotRegistry
+        return SnapshotRegistry
+    if name == "ServeFleet":
+        from repro.serve.fleet import ServeFleet
+        return ServeFleet
+    raise AttributeError(name)

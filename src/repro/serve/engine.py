@@ -27,7 +27,6 @@ empty slots carry all-False masks and are skipped by the sweep's
 
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
@@ -37,13 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import conformance as C
+from repro.data.stream import AsyncStage
 from repro.serve import foldin as F
 from repro.serve.snapshot import ModelSnapshot
 
 DEFAULT_BUCKETS = (32, 64, 128, 256)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "has_fresh"))
 def _engine_step(snap, tokens, mask, z, seeds, sweeps, base_key, *,
                  impl, has_fresh):
     """One engine step on a (B, L) slot batch: initialize fresh slots
@@ -119,8 +118,14 @@ class _Slots:
 @dataclass
 class _Pending:
     rid: int
-    tokens: Optional[np.ndarray]  # dropped at admission (slot holds a copy)
+    tokens: Optional[np.ndarray]      # dropped at admission
     submit_t: float
+    # host packing output: the (bucket,)-padded row pair a slot admission
+    # installs with two memcpys. Filled at submit time (sync path) or by
+    # the admission packer daemon (async path) BEFORE the pending entry
+    # becomes visible to ``_admit``.
+    row_tokens: Optional[np.ndarray] = None
+    row_mask: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -157,7 +162,7 @@ class ServeEngine:
     def __init__(
         self, snap: ModelSnapshot, *, slots: int = 8, burnin: int = 16,
         impl: str = "sparse", buckets: Sequence[int] = DEFAULT_BUCKETS,
-        base_key: Optional[jax.Array] = None,
+        base_key: Optional[jax.Array] = None, async_admit: bool = False,
     ):
         if slots <= 0:
             raise ValueError("slots must be positive")
@@ -179,7 +184,40 @@ class ServeEngine:
         self._completed: dict[int, np.ndarray] = {}  # drained by run()
         self._next_rid = 0
         self.stats = EngineStats()
+        # per-engine jit instances (not module-level): fleet workers on
+        # different devices would otherwise alternate one shared
+        # function's most-recent-call fast path and pay the python
+        # dispatch slow path on every step. The underlying XLA
+        # compilation cache is still shared process-wide.
+        self._step_fn = jax.jit(
+            _engine_step, static_argnames=("impl", "has_fresh")
+        )
         self._theta_fn = jax.jit(F.topic_mixture_from_m)
+        # async admission: host packing of queued documents into padded
+        # bucket rows runs on a bounded daemon stage (the BlockWriteback
+        # double-buffering idiom), overlapping the device sweeps driven
+        # by the step loop. Packing is value-identical to the sync path,
+        # so admission timing cannot change any mixture (the engine's
+        # batching-invariance contract).
+        self._packer: Optional[AsyncStage] = (
+            AsyncStage(self._pack_and_enqueue, depth=4,
+                       name="ServeEngine.admit")
+            if async_admit else None
+        )
+
+    def _pack_and_enqueue(self, item):
+        p, bucket = item
+        self._pack(p, bucket)
+        self._queue[bucket].append(p)  # GIL-atomic; visible to _admit
+
+    def _pack(self, p: _Pending, bucket: int):
+        n = min(p.tokens.size, bucket)
+        row_t = np.zeros((bucket,), np.int32)
+        row_m = np.zeros((bucket,), bool)
+        row_t[:n] = p.tokens[:n]
+        row_m[:n] = True
+        p.row_tokens, p.row_mask = row_t, row_m
+        p.tokens = None
 
     # -- request lifecycle -------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -200,8 +238,13 @@ class ServeEngine:
             raise ValueError(f"seed/request id {rid} already in flight")
         self._next_rid = max(self._next_rid, rid) + 1
         p = _Pending(rid=rid, tokens=tokens, submit_t=time.monotonic())
-        self._queue[self._bucket(tokens.size)].append(p)
         self._reqs[rid] = p
+        bucket = self._bucket(tokens.size)
+        if self._packer is not None:
+            self._packer.submit((p, bucket))  # packs + enqueues off-thread
+        else:
+            self._pack(p, bucket)
+            self._queue[bucket].append(p)
         return rid
 
     # -- slot admission / retirement --------------------------------------
@@ -212,15 +255,15 @@ class ServeEngine:
             if pool.req[s] is not None or not q:
                 continue
             p = q.pop(0)
-            n = min(p.tokens.size, bucket)
-            pool.tokens[s] = 0
-            pool.mask[s] = False
-            pool.tokens[s, :n] = p.tokens[:n]
-            pool.mask[s, :n] = True
+            # rows were packed at submit time (or by the admission packer
+            # daemon, overlapping a device sweep): installation is two
+            # row memcpys, never a zero-and-slice repack.
+            pool.tokens[s] = p.row_tokens
+            pool.mask[s] = p.row_mask
             pool.seeds[s] = p.rid
             pool.sweeps[s] = 0
             pool.req[s] = p.rid
-            p.tokens = None
+            p.row_tokens = p.row_mask = None
             admitted = True
         if admitted:
             pool.mark_dirty()
@@ -271,7 +314,7 @@ class ServeEngine:
             has_fresh = any(r is not None and pool.sweeps[s] == 0
                             for s, r in enumerate(pool.req))
             d_tokens, d_mask, d_seeds = pool.device_batch()
-            pool.z, pool.m = _engine_step(
+            pool.z, pool.m = self._step_fn(
                 self.snap, d_tokens, d_mask, pool.z, d_seeds,
                 jnp.asarray(pool.sweeps), self.base_key, impl=self.impl,
                 has_fresh=has_fresh,
@@ -284,14 +327,34 @@ class ServeEngine:
             self._retire(pool)
         return busy or any(self._queue.values())
 
+    def drain_completed(self) -> dict[int, np.ndarray]:
+        """Hand back (and forget) mixtures completed since the last
+        drain — the incremental counterpart of ``run`` used by fleet
+        workers, which interleave ``step``s of several engines."""
+        out, self._completed = self._completed, {}
+        return out
+
+    def in_flight(self) -> int:
+        """Requests submitted but not yet completed (queued, being
+        packed, or occupying a slot)."""
+        return len(self._reqs)
+
+    def close(self):
+        """Stop the admission packer daemon, if any (idempotent). A
+        fleet calls this when discarding a drained engine after a
+        snapshot hot-swap."""
+        if self._packer is not None:
+            self._packer.close()
+
     def run(self) -> dict[int, np.ndarray]:
         """Drive steps until the queue drains; returns {rid: mixture} for
         requests completed since the previous ``run`` call (completed
         results are drained, not retained — the engine holds no
         per-request state after handing a mixture back)."""
+        if self._packer is not None:
+            self._packer.flush()  # everything submitted is admissible
         t0 = time.monotonic()
         while self.step():
             pass
         self.stats.wall_s += time.monotonic() - t0
-        out, self._completed = self._completed, {}
-        return out
+        return self.drain_completed()

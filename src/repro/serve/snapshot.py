@@ -18,7 +18,8 @@ inherits the z-step conformance contract (core/conformance.py): dense,
 sparse, and pallas execution of a query are bitwise-identical.
 
 ``compact=True`` stores phi/fpack in bf16 and ipack in int16 (valid for
-K* < 32768), roughly halving the artifact and its HBM residency.
+K* <= 32768, enforced at build and load), roughly halving the artifact
+and its HBM residency.
 """
 
 from __future__ import annotations
@@ -66,6 +67,19 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def validate_compact(k: int, where: str):
+    """The compact layout's hard precondition: int16 ``ipack`` stores
+    topic ids 0..K-1, which silently wrap past 32767 — corrupting every
+    draw that touches a high topic — instead of failing. Enforced at
+    build AND load time (an artifact may have been produced by other
+    code or a future K* growth path)."""
+    if k > 2**15:
+        raise ValueError(
+            f"compact int16 topic ids are only valid for K <= 32768; "
+            f"{where} has K={k}. Rebuild without compact=True."
+        )
+
+
 def build_snapshot(
     phi: jax.Array, psi: jax.Array, alpha: float, *,
     w: Optional[int] = None, compact: bool = False, it: int = 0,
@@ -83,8 +97,8 @@ def build_snapshot(
     if w is None:
         w = max(_round_up(int(zops.max_column_nnz(phi)), 8), 8)
     w = min(w, k)
-    if compact and k >= 2**15:
-        raise ValueError(f"compact int16 ids need K < 32768, got K={k}")
+    if compact:
+        validate_compact(k, "build_snapshot(phi)")
     q_a, fpack, ipack = zops.build_word_sparse_tables(
         phi, psi, float(alpha), w, compact=compact, order="topic"
     )
@@ -129,4 +143,7 @@ def load(path: str) -> ModelSnapshot:
     missing = [f for f in ModelSnapshot._fields if f not in flat]
     if missing:
         raise ValueError(f"{path!r} is not a model snapshot: missing {missing}")
-    return ModelSnapshot(**{f: flat[f] for f in ModelSnapshot._fields})
+    snap = ModelSnapshot(**{f: flat[f] for f in ModelSnapshot._fields})
+    if snap.ipack.dtype == jnp.int16:
+        validate_compact(snap.K, f"snapshot at {path!r}")
+    return snap

@@ -252,6 +252,69 @@ def test_snapshot_save_replaces_previous(trained):
     np.testing.assert_array_equal(np.asarray(got.phi), np.asarray(lo.phi))
 
 
+def test_engine_async_admit_bitwise_equal(snap, trained):
+    """Admission packing on the bounded daemon stage (the fleet workers'
+    configuration) is value-identical to inline packing: timing can
+    never leak into a mixture."""
+    _, _, (q_tokens, q_mask) = trained
+    key = jax.random.key(17)
+    docs = _docs_from(q_tokens, q_mask)
+
+    def run(async_admit):
+        eng = ServeEngine(snap, slots=3, burnin=BURNIN, impl="sparse",
+                          buckets=(16, 32), base_key=key,
+                          async_admit=async_admit)
+        try:
+            for i, doc in enumerate(docs):
+                eng.submit(doc, seed=i)
+            return eng.run()
+        finally:
+            eng.close()
+
+    sync, packed = run(False), run(True)
+    assert sorted(sync) == sorted(packed)
+    for rid in sync:
+        np.testing.assert_array_equal(sync[rid], packed[rid], rid)
+
+
+# -- compact int16 precondition (K* < 32768) ---------------------------------
+
+def test_compact_precondition_enforced_at_build():
+    from repro.kernels.hdp_z import ops as zops
+
+    k_bad = 2**15 + 1  # first K whose ids (0..K-1) overflow int16
+    phi = jnp.full((k_bad, 4), 1.0 / 4, jnp.float32)
+    psi = jnp.full((k_bad,), 1.0 / k_bad, jnp.float32)
+    with pytest.raises(ValueError, match="32768"):
+        SNAP.build_snapshot(phi, psi, 0.3, w=8, compact=True)
+    with pytest.raises(ValueError, match="32768"):
+        zops.build_word_sparse_tables(phi, psi, 0.3, 8, compact=True)
+    # the boundary-legal case builds (K = 32768: max id 32767 fits int16)
+    ok = zops.build_word_sparse_tables(phi[:-1], psi[:-1], 0.3, 8,
+                                       compact=True)
+    assert ok[2].dtype == jnp.int16
+
+
+def test_compact_precondition_enforced_at_load(tmp_path):
+    """A compact artifact that claims more topics than int16 can address
+    must be refused at load, not only at build — snapshots can originate
+    from other writers or older code."""
+    k_bad = 2**15 + 1
+    legal = SNAP.build_snapshot(
+        jnp.full((16, 4), 0.25, jnp.float32),
+        jnp.full((16,), 1 / 16, jnp.float32), 0.3, compact=True,
+    )
+    # forge the over-wide model side around the int16 tables
+    forged = legal._replace(
+        phi=jnp.zeros((k_bad, 4), jnp.bfloat16),
+        psi=jnp.zeros((k_bad,), jnp.float32),
+    )
+    d = str(tmp_path / "forged")
+    SNAP.save(d, forged)
+    with pytest.raises(ValueError, match="32768"):
+        SNAP.load(d)
+
+
 def test_engine_truncates_overlong_docs(snap):
     eng = ServeEngine(snap, slots=1, burnin=2, impl="sparse",
                       buckets=(8,), base_key=jax.random.key(0))
