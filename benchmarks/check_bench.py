@@ -20,8 +20,14 @@ import sys
 
 
 def _key(rec):
+    # streaming records gained a z_store field with the pluggable slab
+    # store; older baselines without it were implicitly RAM-backed.
+    z_store = rec.get("z_store")
+    if z_store is None and rec.get("mode") == "streaming":
+        z_store = "ram"
     return (rec.get("mode"), rec.get("z_impl") or rec.get("impl"),
-            rec.get("block_docs"), rec.get("workers"), rec.get("slots"))
+            z_store, rec.get("block_docs"), rec.get("workers"),
+            rec.get("slots"))
 
 
 def _metric(rec):

@@ -28,11 +28,28 @@ VARIANTS = [
 ]
 
 
+def _peak_rss_mb() -> float:
+    """Process-lifetime peak resident set size in MB (ru_maxrss is KB on
+    Linux, bytes on macOS). Monotone across variants measured in one
+    process — the record of a later variant inherits earlier peaks, so
+    the interesting signal is the FIRST record of a fresh process (CI
+    runs ram and disk benches as separate processes for exactly that
+    reason)."""
+    import resource
+    import sys
+
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    div = 1024 ** 2 if sys.platform == "darwin" else 1024
+    return round(rss / div, 1)
+
+
 def stream_bench(args):
     """Streaming-pipeline throughput: tokens/s and per-block wall time as
     a function of block size, on a synthetic corpus several blocks deep.
     Measures the minibatch driver itself (prefetch + per-block z-sweep +
-    statistic merge), not the dry-run roofline."""
+    statistic merge), not the dry-run roofline. Records peak RSS next to
+    tokens/s so the RAM/disk z-store overhead stays tracked
+    (``--z-store disk`` keeps only in-flight z slabs host-resident)."""
     import jax
     import numpy as np
 
@@ -59,7 +76,8 @@ def stream_bench(args):
         bucket = min(args.topics, 128)
         cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
                           z_impl=args.z_impl, hist_cap=128)
-        stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+        stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
+                              z_store=args.z_store)
         state = stream.init_state(jax.random.key(0))
         state = stream.iteration(state)  # compile + warm cache
         t0 = time.time()
@@ -68,6 +86,7 @@ def stream_bench(args):
         dt = time.time() - t0
         rec = {
             "mode": "streaming", "z_impl": args.z_impl,
+            "z_store": state.z_blocks.kind,
             "block_docs": store.block_docs, "blocks": store.num_blocks,
             "tokens": store.num_tokens, "iters": args.iters,
             "sec_per_iter": round(dt / args.iters, 3),
@@ -75,10 +94,13 @@ def stream_bench(args):
                 dt / (args.iters * store.num_blocks), 4),
             "tokens_per_s": round(
                 store.num_tokens * args.iters / dt, 1),
+            "peak_rss_mb": _peak_rss_mb(),
+            "resident_z_slabs_hwm": int(state.z_blocks.high_water),
         }
-        print(f"block_docs={store.block_docs}: "
+        print(f"block_docs={store.block_docs} [{rec['z_store']}]: "
               f"{rec['tokens_per_s']:,} tok/s "
-              f"({rec['sec_per_block']}s/block)", flush=True)
+              f"({rec['sec_per_block']}s/block, "
+              f"peak RSS {rec['peak_rss_mb']} MB)", flush=True)
         results.append(rec)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
@@ -209,6 +231,10 @@ def main():
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--topics", type=int, default=100)
     ap.add_argument("--z-impl", default="sparse")
+    ap.add_argument("--z-store", default=None, choices=["ram", "disk"],
+                    help="z-slab backend for --stream (default: "
+                         "$REPRO_Z_STORE or ram); 'disk' keeps only "
+                         "in-flight slabs host-resident")
     ap.add_argument("--block-docs", type=int, nargs="+",
                     default=[64, 256, 1024])
     # serving-mode knobs (CPU-sized defaults so CI can run them)

@@ -6,7 +6,13 @@ O(K*V) model state on device, so the trainable corpus size is bounded by
 host storage, not device memory — the prerequisite for the paper's
 8m-document PubMed run on a single machine.
 
+With ``--z-store disk`` the topic indicators go out-of-core as well:
+only ``prefetch_depth + writeback_depth + 1`` z slabs are ever
+host-resident (the rest live as per-block version files on disk), so
+host RAM stops bounding corpus size too.
+
   PYTHONPATH=src python examples/streaming_hdp.py --blocks 10 --iters 20
+  PYTHONPATH=src python examples/streaming_hdp.py --z-store disk
 """
 
 import argparse
@@ -35,6 +41,9 @@ def main():
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--topics", type=int, default=50)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--z-store", default=None, choices=["ram", "disk"],
+                    help="z-slab backend (default: $REPRO_Z_STORE or "
+                         "ram); 'disk' spills slabs to per-block files")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -55,8 +64,10 @@ def main():
              // mesh.shape["model"]) * mesh.shape["model"]
     cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=64, z_impl="sparse",
                       hist_cap=64)
-    stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+    stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
+                          z_store=args.z_store, z_dir=args.ckpt)
     state = stream.init_state(jax.random.key(0))
+    print(f"z slabs: {state.z_blocks.kind} store")
 
     t0 = time.time()
     peak_dev = 0
@@ -75,6 +86,11 @@ def main():
           f"peak device-resident {peak_dev/1e6:.1f} MB for a "
           f"{corpus_bytes/1e6:.1f} MB corpus "
           f"({store.num_blocks}x the block budget)")
+    if state.z_blocks.kind == "disk":
+        print(f"out-of-core z: at most {state.z_blocks.high_water} of "
+              f"{store.num_blocks} slabs were host-resident at once "
+              f"(budget: prefetch {stream.prefetch_depth} + write-back "
+              f"{stream.writeback_depth} + 1 in flush)")
 
 
 if __name__ == "__main__":

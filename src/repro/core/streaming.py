@@ -1,4 +1,5 @@
-"""Streaming minibatch Gibbs driver: corpora larger than device memory.
+"""Streaming minibatch Gibbs driver: corpora larger than device memory
+(and, with the disk slab store, larger than host memory).
 
 ``StreamingHDP`` layers on the mesh-local sub-steps of
 ``core/sharded.py`` to sweep a ``ShardedCorpusStore`` block-by-block
@@ -6,8 +7,15 @@ within each Gibbs iteration:
 
   * the model state (n, phi, varphi, psi, l) stays device-resident
     across blocks — O(K*V), independent of corpus size;
-  * topic indicators z live host-side, one (DB, L) slab per block, and
-    visit the device only while their block is being swept;
+  * topic indicators z live in a pluggable ``ZSlabStore``
+    (data/zstore.py): ``RamZStore`` keeps every (DB, L) slab in one host
+    array (the classic layout), ``DiskZStore`` keeps slabs as immutable
+    per-block version files on disk with only *in-flight* slabs
+    host-resident — at most ``prefetch_depth + writeback_depth + 1`` —
+    which removes the last >RAM blocker for the paper's PubMed scale
+    (8m documents / 768m tokens on one machine). Both backends are
+    bitwise-interchangeable; select with ``z_store="ram"|"disk"`` or the
+    ``REPRO_Z_STORE`` env var;
   * the Phi-step (PPU draw + z-step table build/gather) runs ONCE per
     iteration — valid because Phi and Psi are held fixed during the
     z-step, making the block sweep embarrassingly parallel over blocks;
@@ -21,13 +29,16 @@ within each Gibbs iteration:
 The per-block timeline is fully overlapped, with the driver thread only
 *dispatching* work:
 
-    H2D   stage block b+1          (BlockPrefetcher daemon thread)
-    sweep block b                  (device, async dispatch)
-    D2H   write back block b-1     (BlockWriteback daemon thread)
+    disk  read z slab b+2           (BlockPrefetcher pre-stage thread;
+                                     out-of-core backend only)
+    H2D   stage block b+1           (BlockPrefetcher stage thread)
+    sweep block b                   (device, async dispatch)
+    D2H   write back block b-1      (BlockWriteback daemon thread,
+                                     through the slab store)
 
 The driver never blocks on a sweep it has dispatched: the swept z block
 is handed to the write-back thread, which materializes it (waiting on
-the device there) and stores it into the host slab. The only driver
+the device there) and writes it through the slab store. The only driver
 sync points are mid-epoch checkpoint saves (write-back flush) and the
 iteration tail.
 
@@ -38,18 +49,23 @@ otherwise, so a single-block stream consumes randomness — and therefore
 produces states — bitwise-identically to the monolithic
 ``ShardedHDP.jit_iteration`` (asserted by tests/test_streaming.py).
 
-Checkpoints are resumable mid-epoch: the payload carries the block
-cursor, the partial accumulators, and the pre-split chain key; resume
-re-derives the iteration keys and the z-step tables deterministically
-and continues from the cursor block.
+Checkpoints are resumable mid-epoch, and share storage with the live
+state: a save flushes dirty slabs into the per-block ``ZBlockStore``
+version files and pins the version vector in the payload manifest. For
+a ``DiskZStore`` homed at the checkpoint directory the flush is free —
+the live version files ARE the checkpoint files. The payload carries
+the block cursor, the partial accumulators, and the pre-split chain
+key; resume re-derives the iteration keys and the z-step tables
+deterministically and continues from the cursor block without
+materializing the full z array (disk backend adopts the pinned version
+vector as-is).
 """
 
 from __future__ import annotations
 
 import functools
 import os
-import re
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,84 +77,14 @@ from repro.core.sharded import ShardedHDP
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
 from repro.data.stream import (BlockPrefetcher, BlockWriteback,
                                ShardedCorpusStore)
+from repro.data.zstore import (ZBlockStore, ZSlabStore,  # noqa: F401
+                               make_zslab_store)
 from repro.train import checkpoint as CKPT
 
 
-class ZBlockStore:
-    """Per-block versioned z-slab files: incremental mid-epoch saves.
-
-    Serializing the full ``z_blocks`` array every checkpoint cadence is
-    O(corpus) I/O; between two mid-epoch saves only ``ckpt_every_blocks``
-    slabs have actually changed. This store writes each block to its own
-    immutable ``zstore/block_<b>.v<ver>.npy`` file — a new version file
-    per write, never an overwrite, so a crash mid-write can only corrupt
-    a file no committed manifest references. The checkpoint payload then
-    carries just the (B,) version vector; restore loads each block at
-    its recorded version.
-
-    Staleness is tracked by content *stamps* (monotone counters bumped
-    by the driver after each block sweep): ``sync`` rewrites exactly the
-    blocks whose in-memory stamp differs from the stamp last written to
-    THIS store, so alternating save dirs stay individually consistent.
-    Version files referenced by no retained checkpoint are garbage
-    collected after each successful save.
-    """
-
-    _FILE_RE = re.compile(r"^block_(\d+)\.v(\d+)\.npy$")
-
-    def __init__(self, ckpt_dir: str, num_blocks: int):
-        self.dir = os.path.join(ckpt_dir, "zstore")
-        os.makedirs(self.dir, exist_ok=True)
-        self.versions = np.full(num_blocks, -1, np.int64)
-        self.written_stamp = np.full(num_blocks, -1, np.int64)
-        vers = [int(m.group(2)) for m in
-                (self._FILE_RE.match(f) for f in os.listdir(self.dir)) if m]
-        self._next_ver = max(vers, default=-1) + 1
-
-    def _path(self, b: int, ver: int) -> str:
-        return os.path.join(self.dir, f"block_{b}.v{ver}.npy")
-
-    def sync(self, z_blocks: np.ndarray, stamps: np.ndarray) -> tuple:
-        """Write blocks whose content stamp moved since the last sync to
-        this store; returns (version vector, blocks written)."""
-        ver = self._next_ver
-        wrote = 0
-        for b in range(len(self.versions)):
-            if self.versions[b] >= 0 and self.written_stamp[b] == stamps[b]:
-                continue
-            np.save(self._path(b, ver), z_blocks[b])
-            self.versions[b] = ver
-            self.written_stamp[b] = stamps[b]
-            wrote += 1
-        if wrote:
-            self._next_ver = ver + 1
-        return self.versions.copy(), wrote
-
-    def load(self, versions: np.ndarray) -> np.ndarray:
-        blocks = [np.load(self._path(b, int(v)))
-                  for b, v in enumerate(versions)]
-        return np.stack(blocks).astype(np.int32)
-
-    def mark_loaded(self, versions: np.ndarray, stamps: np.ndarray):
-        """After a restore: disk content at ``versions`` IS the current
-        in-memory content (stamps), so nothing is dirty."""
-        self.versions = np.asarray(versions, np.int64).copy()
-        self.written_stamp = np.asarray(stamps, np.int64).copy()
-
-    def gc(self, referenced: set):
-        """Delete version files not referenced by any retained
-        checkpoint manifest. ``referenced``: set of (block, version)."""
-        for f in os.listdir(self.dir):
-            m = self._FILE_RE.match(f)
-            if m and (int(m.group(1)), int(m.group(2))) not in referenced:
-                try:
-                    os.remove(os.path.join(self.dir, f))
-                except OSError:
-                    pass
-
-
 class StreamingState(NamedTuple):
-    """Device-resident model state + host-resident per-block z slabs."""
+    """Device-resident model state + a handle to the per-block z slabs
+    (``ZSlabStore``: host array or out-of-core disk store)."""
     n: jax.Array        # (K, V) int32, vocab-sharded
     phi: jax.Array      # (K, V)
     varphi: jax.Array   # (K, V) int32
@@ -146,24 +92,42 @@ class StreamingState(NamedTuple):
     l: jax.Array        # (K,)
     key: jax.Array      # chain key (pre-split for the NEXT iteration)
     it: jax.Array       # completed Gibbs iterations
-    z_blocks: np.ndarray  # (B, DB, L) int32, host memory (or memmap)
+    z_blocks: ZSlabStore  # (B, DB, L) int32 slabs behind the store API
 
 
 class StreamingHDP:
     """Minibatch Gibbs driver over a block store.
 
     Device memory holds one corpus block (two with prefetch) plus the
-    O(K*V) model state, regardless of corpus size.
+    O(K*V) model state, regardless of corpus size; with
+    ``z_store="disk"`` host memory holds only the in-flight z slabs as
+    well, so neither corpus nor z need fit in RAM.
+
+    ``z_store`` selects the slab backend ("ram" | "disk"; default: the
+    ``REPRO_Z_STORE`` env var, else "ram"). ``z_dir`` roots the disk
+    backend's version files — point it at the checkpoint directory to
+    make saves near-free (live files double as checkpoint files); the
+    default is a self-cleaning temp dir. One live run per ``z_dir``.
     """
 
     def __init__(self, sharded: ShardedHDP, store: ShardedCorpusStore, *,
-                 prefetch_depth: int = 2, writeback_depth: int = 2):
+                 prefetch_depth: int = 2, writeback_depth: int = 2,
+                 z_store: Union[str, None] = None,
+                 z_dir: Optional[str] = None):
         self.sh = sharded
         self.cfg = sharded.cfg
         self.store = store
         H.validate_bucket(self.cfg, store.max_len)
         self.prefetch_depth = prefetch_depth
         self.writeback_depth = writeback_depth
+        if z_store is None:
+            z_store = os.environ.get("REPRO_Z_STORE", "ram")
+        if z_store not in ("ram", "disk"):
+            raise ValueError(
+                f"z_store must be 'ram' or 'disk', got {z_store!r}"
+            )
+        self.z_store = z_store
+        self.z_dir = z_dir
         ss = sharded.state_shardings()
         ts, ms = sharded.corpus_shardings()
         self._z_sh, self._n_sh = ss.z, ss.n
@@ -184,18 +148,24 @@ class StreamingHDP:
                 lambda l: (l, sample_psi(k_psi, l, cfg.gamma))
             )(sample_l(k_l, dh, psi, cfg.alpha))
         )
-        # content stamps for incremental z checkpointing: bumped after
-        # every in-place slab update; each ZBlockStore compares them to
-        # what it last wrote (per save dir).
-        self._z_stamp = np.zeros(store.num_blocks, np.int64)
-        self._stamp_counter = 0
+        # foreign-dir checkpoint stores (save dirs that are NOT a disk
+        # slab store's home); slab stores track their own dirty stamps.
         self._zstores: dict[str, ZBlockStore] = {}
 
-    def _touch_z(self, b: int):
-        self._stamp_counter += 1
-        self._z_stamp[b] = self._stamp_counter
+    def _make_slab_store(self) -> ZSlabStore:
+        return make_zslab_store(
+            self.z_store, self.store.num_blocks,
+            (self.store.block_docs, self.store.max_len), root=self.z_dir,
+        )
 
-    def _zstore(self, ckpt_dir: str) -> ZBlockStore:
+    def _zstore(self, ckpt_dir: str, slab: ZSlabStore) -> ZBlockStore:
+        home = slab.blockstore_for(ckpt_dir)
+        if home is not None:
+            # a disk slab store homed at the checkpoint dir owns the one
+            # ZBlockStore on that dir — drop any foreign handle so two
+            # instances never race the version counter.
+            self._zstores.pop(ckpt_dir, None)
+            return home
         zs = self._zstores.get(ckpt_dir)
         if zs is None:
             zs = self._zstores[ckpt_dir] = ZBlockStore(
@@ -222,11 +192,9 @@ class StreamingHDP:
         n = jnp.asarray(n.astype(np.int32))
         phi, varphi = ppu_sample(kp, n, cfg.beta)
         psi = gem_prior_sample(kd, cfg.K, cfg.gamma)
-        z_blocks = np.zeros(
-            (store.num_blocks, store.block_docs, store.max_len), np.int32
-        )
-        for b in range(store.num_blocks):
-            self._touch_z(b)  # fresh content: every slab is save-dirty
+        # a fresh slab store starts as all-zeros content with every slab
+        # save-dirty (the store constructor stamps them).
+        z_blocks = self._make_slab_store()
         return StreamingState(
             n=jax.device_put(n, self._n_sh),
             phi=jax.device_put(phi, self._n_sh),
@@ -237,28 +205,35 @@ class StreamingHDP:
         )
 
     # -- one iteration (optionally partial, for checkpoint/resume) --------
-    def _stage(self, blk):
-        return (
-            blk.index,
-            jax.device_put(jnp.asarray(blk.tokens), self._ts),
-            jax.device_put(jnp.asarray(blk.mask), self._ms),
-            jax.device_put(jnp.asarray(blk.z), self._z_sh),
-        )
+    def _staged_blocks(self, z_store: ZSlabStore, start: int):
+        """Two-stage prefetch pipeline: the pre-stage checks the block's
+        z slab out of the store (a disk read for the out-of-core
+        backend, a view for RAM), the stage thread device_puts and
+        releases the host slab. The shared in-flight budget is
+        ``prefetch_depth`` slabs."""
 
-    def _staged_blocks(self, z_blocks, start: int):
-        class _Blk(NamedTuple):
-            index: int
-            tokens: np.ndarray
-            mask: np.ndarray
-            z: np.ndarray
+        def read_z(blk):
+            return blk, z_store.read(blk.index)
 
-        def gen():
-            for blk in self.store.blocks(start):
-                yield _Blk(blk.index, blk.tokens, blk.mask,
-                           z_blocks[blk.index])
+        def stage(item):
+            blk, z = item
+            out = (
+                blk.index,
+                jax.device_put(jnp.asarray(blk.tokens), self._ts),
+                jax.device_put(jnp.asarray(blk.mask), self._ms),
+                jax.device_put(jnp.asarray(z), self._z_sh),
+            )
+            z_store.release(blk.index)  # device copy exists now
+            return out
 
-        return BlockPrefetcher(gen(), self._stage,
-                               depth=self.prefetch_depth)
+        def drop(item):
+            # pre-read slabs discarded on early exit (kill/stop/error)
+            # must check back in, or resident accounting leaks.
+            z_store.release(item[0].index)
+
+        return BlockPrefetcher(self.store.blocks(start), stage,
+                               depth=self.prefetch_depth, pre=read_z,
+                               drop=drop)
 
     def iteration(
         self, state: StreamingState, *,
@@ -272,9 +247,10 @@ class StreamingHDP:
         Per block the jitted sweep emits (z', delta_n, dh) and the
         device-resident running statistic advances by
         ``n_run += delta_n`` — no recount anywhere in the loop. Swept z
-        blocks are written back to host asynchronously (BlockWriteback);
-        the driver thread only dispatches, so block b+1's H2D staging,
-        block b's sweep, and block b-1's D2H write-back overlap.
+        blocks are written back through the slab store asynchronously
+        (BlockWriteback); the driver thread only dispatches, so block
+        b+2's disk z read, block b+1's H2D staging, block b's sweep,
+        and block b-1's write-back overlap.
 
         The keyword arguments exist for mid-epoch resume (start_block,
         the running statistic ``n_run``, the histogram accumulator
@@ -283,7 +259,7 @@ class StreamingHDP:
         advanced state, or None if the sweep was stopped early — the
         in-flight iteration then lives ONLY in the checkpoint (a partial
         save is forced at the stop cursor), because the swept z slabs
-        have already been updated in place while n/psi/key have not.
+        have already been stored while n/psi/key have not.
         ``stop_after_blocks`` therefore requires ``ckpt_dir``.
         """
         cfg = self.cfg
@@ -306,13 +282,12 @@ class StreamingHDP:
                 jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
                 self._repl_sh)
 
-        z_blocks = state.z_blocks
+        z_store = state.z_blocks
         done = 0
         saved_cursor = -1
-        staged = self._staged_blocks(z_blocks, start_block)
+        staged = self._staged_blocks(z_store, start_block)
         writer = BlockWriteback(
-            lambda b, arr: z_blocks.__setitem__(b, arr),
-            depth=self.writeback_depth,
+            z_store.write, depth=self.writeback_depth,
         )
         try:
             for b, tokens_b, mask_b, z_b in staged:
@@ -325,13 +300,12 @@ class StreamingHDP:
                 )
                 n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
                 writer.submit(b, z_b)
-                self._touch_z(b)
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
                         and cursor < self.store.num_blocks
                         and cursor % ckpt_every_blocks == 0):
-                    writer.flush()  # checkpoint reads the host slabs
+                    writer.flush()  # checkpoint reads the stored slabs
                     self._save_partial(ckpt_dir, state, cursor, n_run, dh_acc)
                     saved_cursor = cursor
                 if stop_after_blocks is not None and done >= stop_after_blocks:
@@ -342,12 +316,12 @@ class StreamingHDP:
                                 ckpt_dir, state, cursor, n_run, dh_acc)
                         return None
         finally:
-            staged.close()  # unblock the prefetch worker on early exit
+            staged.close()  # unblock the prefetch workers on early exit
             writer.close()  # drain outstanding write-backs
         l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
         return StreamingState(
             n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
-            key=key, it=state.it + 1, z_blocks=z_blocks,
+            key=key, it=state.it + 1, z_blocks=z_store,
         )
 
     def run(
@@ -416,9 +390,12 @@ class StreamingHDP:
     # -- checkpointing ----------------------------------------------------
     # One logical "step" per saved payload: step = it * B + cursor, so
     # mid-epoch checkpoints order correctly between iteration boundaries.
-    # z slabs do NOT live in the payload: they go to the per-block
-    # ZBlockStore (only blocks touched since the last save are written)
-    # and the payload records the (B,) version vector + block geometry.
+    # z slabs do NOT live in the payload: a save flushes dirty slabs into
+    # the per-block ZBlockStore version files (a no-op when the live
+    # DiskZStore is homed at the checkpoint dir — its files ARE the
+    # checkpoint files) and the payload pins the (B,) version vector +
+    # block geometry. GC keeps exactly the union of pinned vectors across
+    # retained manifests plus the live store's current versions.
 
     def _payload(self, state: StreamingState, cursor: int, n_run, dh_acc,
                  z_versions: np.ndarray):
@@ -461,25 +438,33 @@ class StreamingHDP:
             "dh_acc": jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
         }
 
+    def _referenced_z_versions(self, ckpt_dir: str) -> set:
+        """(block, version) pairs pinned by any retained checkpoint
+        manifest in ``ckpt_dir`` (version -1 = implicit zeros, no
+        file)."""
+        refs = set()
+        for vers in CKPT.arrays_across_steps(ckpt_dir, "z_versions").values():
+            refs |= {(b, int(v)) for b, v in enumerate(vers) if int(v) >= 0}
+        return refs
+
     def _save(self, ckpt_dir, state, cursor, n_run, dh_acc) -> str:
-        """Incremental save: dirty z slabs first (new immutable version
-        files), then the atomic payload commit that references them,
-        then GC of versions no retained checkpoint references. A crash
+        """Incremental save = flush-dirty-slabs + pin manifest: dirty z
+        slabs flush into immutable version files first (free when the
+        live DiskZStore is homed at ``ckpt_dir``), then the atomic
+        payload commit pins the version vector, then GC sweeps versions
+        that no retained manifest pins and that are not live state —
+        superseded files AND orphans from crashed writers. A crash
         between the first two steps leaves only orphan version files —
         the previous checkpoint stays fully consistent."""
-        zs = self._zstore(ckpt_dir)
-        versions, _ = zs.sync(state.z_blocks, self._z_stamp)
+        slab = state.z_blocks
+        zbs = self._zstore(ckpt_dir, slab)
+        versions, _ = slab.sync_to(zbs)
         step = int(state.it) * self.store.num_blocks + cursor
         path = CKPT.save(ckpt_dir, step,
                          self._payload(state, cursor, n_run, dh_acc, versions))
-        referenced = set()
-        for s in CKPT.all_steps(ckpt_dir):
-            if "z_versions" in CKPT.manifest_keys(ckpt_dir, s):
-                referenced |= {
-                    (b, int(v)) for b, v in
-                    enumerate(CKPT.load_array(ckpt_dir, s, "z_versions"))
-                }
-        zs.gc(referenced)
+        referenced = self._referenced_z_versions(ckpt_dir)
+        slab.pin_versions(zbs, referenced)
+        zbs.gc(referenced | slab.live_versions_in(zbs))
         return path
 
     def save(self, ckpt_dir: str, state: StreamingState) -> str:
@@ -495,7 +480,13 @@ class StreamingHDP:
     def restore(self, ckpt_dir: str):
         """Returns (state, resume_kwargs): pass resume_kwargs to
         ``iteration`` to finish a partially-swept epoch (empty dict when
-        the checkpoint is at an iteration boundary)."""
+        the checkpoint is at an iteration boundary).
+
+        The z slabs are NOT materialized into one array: the slab store
+        adopts the pinned version vector (free for a DiskZStore homed at
+        ``ckpt_dir``; a per-block bounded-memory copy otherwise; the RAM
+        backend stacks into its host array as before). Orphan version
+        files the pinned manifests do not reference are swept."""
         step = CKPT.latest_step(ckpt_dir)
         if step is None:
             return None, {}
@@ -538,13 +529,12 @@ class StreamingHDP:
                 f"was written with"
             )
         versions = np.asarray(payload["z_versions"], np.int64)
-        zs = self._zstore(ckpt_dir)
-        z_blocks = zs.load(versions)
-        # the loaded content IS the new in-memory content: restamp every
-        # slab and record this store as in sync with those stamps.
-        for b in range(store.num_blocks):
-            self._touch_z(b)
-        zs.mark_loaded(versions, self._z_stamp)
+        slab = self._make_slab_store()
+        zbs = self._zstore(ckpt_dir, slab)
+        slab.load_from(zbs, versions)
+        referenced = self._referenced_z_versions(ckpt_dir)
+        slab.pin_versions(zbs, referenced)
+        zbs.gc(referenced | slab.live_versions_in(zbs))
         m = payload["model"]
         state = StreamingState(
             n=jax.device_put(m["n"], self._n_sh),
@@ -553,7 +543,7 @@ class StreamingHDP:
             psi=jax.device_put(m["psi"], self._repl_sh),
             l=jax.device_put(m["l"], self._repl_sh),
             key=m["key"], it=m["it"],
-            z_blocks=z_blocks,
+            z_blocks=slab,
         )
         cursor = int(payload["cursor"])
         if cursor == 0:

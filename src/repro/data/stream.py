@@ -12,7 +12,11 @@ pipeline removes that cap:
     in an ``np.memmap`` on disk (corpora larger than host memory).
   * ``BlockPrefetcher`` double-buffers the host->device transfer: while
     the sampler sweeps block b, a background thread stages block b+1 onto
-    the device, so the transfer hides behind compute.
+    the device, so the transfer hides behind compute. An optional
+    ``pre`` stage (its own thread, shared in-flight budget) runs the
+    z-slab read from the pluggable slab store (data/zstore.py) upstream
+    of staging, so disk->host z loads of the out-of-core backend overlap
+    both the H2D copy and the sweep.
   * ``BlockWriteback`` double-buffers the device->host direction: swept
     z blocks are materialized (which waits on the device computation)
     and written into the host slab array on a background thread, so the
@@ -219,20 +223,42 @@ class BlockWriteback(AsyncStage):
 
 
 class BlockPrefetcher:
-    """Double-buffered host->device block staging.
+    """Double-buffered host->device block staging, with an optional
+    read-ahead pre-stage.
 
     Wraps an iterator of host items; a daemon thread runs ``stage`` (e.g.
     ``jax.device_put`` with the corpus shardings) up to ``depth`` items
     ahead of the consumer, so the host->device copy of block b+1 overlaps
     the Gibbs sweep of block b.
+
+    ``pre`` adds a second pipeline stage on its own daemon thread,
+    upstream of ``stage`` — the streaming driver's disk->host z-slab
+    read (``DiskZStore.read``), so a disk load of block b+2 overlaps the
+    H2D staging of block b+1 AND the sweep of block b. The two stages
+    share ONE in-flight budget of ``depth`` items, enforced by a
+    semaphore held from ``pre`` start until the consumer takes the
+    staged item: at most ``depth`` slabs are ever between read-start and
+    consumption, which is what bounds the out-of-core backend's resident
+    slab count (see data/zstore.py). ``drop`` (pre mode only) is called
+    on items discarded after ``pre`` but before a successful ``stage``
+    (early close, stage error) so ``pre``'s side effects can be undone —
+    the streaming driver releases the slab checkout there.
     """
 
     _DONE = object()
 
-    def __init__(self, items, stage, *, depth: int = 2):
-        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+    def __init__(self, items, stage, *, depth: int = 2, pre=None,
+                 drop=None):
         self._err: Optional[BaseException] = None
         self._stop = threading.Event()
+        self._sem: Optional[threading.Semaphore] = None
+        if pre is None:
+            self._init_single(items, stage, depth)
+        else:
+            self._init_piped(items, stage, depth, pre, drop)
+
+    def _init_single(self, items, stage, depth):
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
 
         def put(item) -> bool:
             # bounded put that aborts when the consumer closes us, so an
@@ -258,18 +284,70 @@ class BlockPrefetcher:
             finally:
                 put(self._DONE)
 
-        self._thread = threading.Thread(target=worker, daemon=True)
-        self._thread.start()
+        self._threads = [threading.Thread(target=worker, daemon=True)]
+        self._threads[0].start()
+
+    def _init_piped(self, items, stage, depth, pre, drop):
+        # both queues are unbounded: the semaphore is the only in-flight
+        # bound, released when the consumer takes a staged item (or the
+        # pipeline is closed, which aborts the acquire loop).
+        self._q = queue.Queue()
+        mid: queue.Queue = queue.Queue()
+        self._sem = threading.Semaphore(max(depth, 1))
+
+        def acquire() -> bool:
+            while not self._stop.is_set():
+                if self._sem.acquire(timeout=0.05):
+                    return True
+            return False
+
+        def reader():
+            try:
+                for item in items:
+                    if self._stop.is_set() or not acquire():
+                        break
+                    mid.put(pre(item))
+            except BaseException as e:  # surfaced on the consumer side
+                self._err = e
+            finally:
+                mid.put(self._DONE)
+
+        def stager():
+            while True:
+                item = mid.get()
+                if item is self._DONE:
+                    self._q.put(self._DONE)
+                    return
+                if self._err is not None or self._stop.is_set():
+                    # consumer is going away: drop unstaged items, giving
+                    # ``drop`` a chance to undo ``pre``'s side effects
+                    # (e.g. release a slab-store checkout).
+                    if drop is not None:
+                        drop(item)
+                    continue
+                try:
+                    self._q.put(stage(item))
+                except BaseException as e:
+                    self._err = e
+                    self._stop.set()  # unblock the reader's acquire loop
+                    if drop is not None:
+                        drop(item)
+
+        self._threads = [threading.Thread(target=reader, daemon=True),
+                         threading.Thread(target=stager, daemon=True)]
+        for t in self._threads:
+            t.start()
 
     def close(self):
-        """Stop the worker and release staged items (idempotent)."""
+        """Stop the workers and release staged items (idempotent)."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=5)
+        for t in self._threads:
+            t.join(timeout=5)
 
     def __iter__(self):
         try:
@@ -279,6 +357,8 @@ class BlockPrefetcher:
                     if self._err is not None:
                         raise self._err
                     return
+                if self._sem is not None:
+                    self._sem.release()
                 yield item
         finally:
             self.close()

@@ -1,0 +1,475 @@
+"""Pluggable z-slab storage: one abstraction for live training state AND
+checkpoints.
+
+The topic-indicator array z is the largest state in the system —
+O(corpus), dwarfing the O(K*V) model — and before this module it had two
+unrelated owners: the live training loop held every (DB, L) slab in one
+resident host array, while the checkpoint system serialized slabs to
+per-block immutable version files. ``ZSlabStore`` unifies them:
+
+  * ``RamZStore`` — the previous behavior, bitwise-identical: all slabs
+    live in one host ``(B, DB, L)`` array; reads are views, writes are
+    in-place row stores.
+  * ``DiskZStore`` — out-of-core: slabs live as immutable per-block
+    version files on disk (the exact ``zstore/block_<b>.v<ver>.npy``
+    layout checkpoints already use — ``ZBlockStore`` below is the shared
+    persistence layer). Only *in-flight* slabs are host-resident: the
+    prefetch read-ahead, the slab being swept, and the write-back in
+    progress — at most ``prefetch_depth + writeback_depth + 1``
+    (asserted by the ``high_water`` counter in tests/test_streaming.py).
+    Checkpointing to the store's own root directory is near-free: the
+    live version files ARE the checkpoint files, so a save just pins the
+    current version vector into the payload manifest.
+
+Both backends expose the same read/write/sync_to/load_from surface and
+produce bitwise-identical training states under any interleaving of
+iterations, mid-epoch saves, and restores (tests/test_zstore_property.py
+drives random schedules of exactly those operations).
+
+Consistency contract shared with the checkpoint layer
+(train/checkpoint.py): version files are immutable and committed
+manifests only ever reference files that were fully written before the
+payload commit, so a crash anywhere leaves at worst *orphan* version
+files — swept by ``ZBlockStore.gc`` against the union of every retained
+manifest's pinned version vector and the live store's current versions.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+import threading
+import weakref
+from typing import Callable, Optional
+
+import numpy as np
+
+# Content stamps are process-global monotone counters so that two slab
+# stores (e.g. two chains driven by one StreamingHDP in tests) can save
+# into the same checkpoint directory without stamp collisions: a
+# ZBlockStore's written_stamp can never accidentally match a slab it has
+# not actually written.
+_STAMP_LOCK = threading.Lock()
+_STAMP = 0
+
+
+def _next_stamp() -> int:
+    global _STAMP
+    with _STAMP_LOCK:
+        _STAMP += 1
+        return _STAMP
+
+
+class ZBlockStore:
+    """Per-block immutable z-slab version files: the shared persistence
+    layer under both incremental checkpoints and ``DiskZStore``.
+
+    Each write lands in its own ``zstore/block_<b>.v<ver>.npy`` file — a
+    new version file per write, never an overwrite, so a crash mid-write
+    can only corrupt a file no committed manifest references. Checkpoint
+    payloads carry just the (B,) version vector; restore loads each
+    block at its recorded version (version -1 denotes the implicit
+    all-zeros slab a fresh ``DiskZStore`` starts from, so stores that
+    checkpoint before their first sweep need no files at all).
+
+    Staleness is tracked by content *stamps* (process-global monotone
+    counters bumped on every slab write): ``sync`` rewrites exactly the
+    blocks whose in-memory stamp differs from the stamp last written to
+    THIS store, so alternating save dirs stay individually consistent.
+
+    ``gc`` sweeps EVERY on-disk version file not in the caller's
+    referenced set — including orphans left by a crash between a version
+    file landing and the manifest commit that would have referenced it
+    (regression-tested by forging exactly that state).
+    """
+
+    _FILE_RE = re.compile(r"^block_(\d+)\.v(\d+)\.npy$")
+
+    def __init__(self, root_dir: str, num_blocks: int):
+        self.root = os.path.abspath(root_dir)
+        self.dir = os.path.join(self.root, "zstore")
+        os.makedirs(self.dir, exist_ok=True)
+        self.versions = np.full(num_blocks, -1, np.int64)
+        self.written_stamp = np.full(num_blocks, -1, np.int64)
+        # never reuse a version number that may exist on disk (including
+        # orphans from a crashed writer): scan at open.
+        self._next_ver = 0
+        self._rescan_next_ver()
+
+    def _path(self, b: int, ver: int) -> str:
+        return os.path.join(self.dir, f"block_{b}.v{ver}.npy")
+
+    def _rescan_next_ver(self):
+        """Bump ``_next_ver`` past anything on disk. Called per ``sync``
+        so that a checkpoint dir written to by several store instances
+        (e.g. two drivers alternating saves) never reuses — and thereby
+        overwrites — a version number another instance committed."""
+        vers = [int(m.group(2)) for m in
+                (self._FILE_RE.match(f) for f in os.listdir(self.dir)) if m]
+        self._next_ver = max(self._next_ver, max(vers, default=-1) + 1)
+
+    def write_block(self, b: int, arr: np.ndarray, stamp: int) -> int:
+        """Write one slab as a new immutable version file; returns the
+        version. Used by ``DiskZStore`` live writes (one version per
+        block sweep)."""
+        ver = self._next_ver
+        if os.path.exists(self._path(b, ver)):
+            # another store instance committed this (b, ver) into the
+            # directory since our last scan (e.g. a second chain
+            # checkpointing here): never overwrite an immutable file.
+            self._rescan_next_ver()
+            ver = self._next_ver
+        self._next_ver = ver + 1
+        np.save(self._path(b, ver), np.asarray(arr, np.int32))
+        self.versions[b] = ver
+        self.written_stamp[b] = stamp
+        return ver
+
+    def sync(self, read_slab: Callable[[int], np.ndarray],
+             stamps: np.ndarray) -> tuple:
+        """Write blocks whose content stamp moved since the last sync to
+        this store; returns (version vector, blocks written).
+        ``read_slab(b)`` supplies the slab content (an array row for
+        ``RamZStore``, a disk read for a foreign-dir ``DiskZStore``
+        sync)."""
+        self._rescan_next_ver()
+        ver = self._next_ver
+        wrote = 0
+        for b in range(len(self.versions)):
+            if self.versions[b] >= 0 and self.written_stamp[b] == stamps[b]:
+                continue
+            np.save(self._path(b, ver), read_slab(b))
+            self.versions[b] = ver
+            self.written_stamp[b] = stamps[b]
+            wrote += 1
+        if wrote:
+            self._next_ver = ver + 1
+        return self.versions.copy(), wrote
+
+    def load_block(self, b: int, ver: int,
+                   block_shape: Optional[tuple] = None) -> np.ndarray:
+        """One slab at its recorded version; version -1 is the implicit
+        zero slab (needs ``block_shape``)."""
+        if ver < 0:
+            if block_shape is None:
+                raise ValueError(
+                    f"block {b} recorded at version -1 (implicit zeros) "
+                    "but no block_shape was provided"
+                )
+            return np.zeros(block_shape, np.int32)
+        return np.load(self._path(b, int(ver))).astype(np.int32)
+
+    def load(self, versions: np.ndarray,
+             block_shape: Optional[tuple] = None) -> np.ndarray:
+        """Materialize every block at its recorded version into one
+        (B, DB, L) array — the RAM-backend restore path; O(corpus) host
+        memory by design."""
+        return np.stack([self.load_block(b, int(v), block_shape)
+                         for b, v in enumerate(versions)])
+
+    def delete(self, b: int, ver: int):
+        """Best-effort removal of one superseded, unpinned version file
+        (``DiskZStore`` eager reclamation between checkpoints)."""
+        try:
+            os.remove(self._path(b, ver))
+        except OSError:
+            pass
+
+    def mark_loaded(self, versions: np.ndarray, stamps: np.ndarray):
+        """After a restore: disk content at ``versions`` IS the current
+        in-memory content (stamps), so nothing is dirty."""
+        self.versions = np.asarray(versions, np.int64).copy()
+        self.written_stamp = np.asarray(stamps, np.int64).copy()
+
+    def gc(self, referenced: set):
+        """Delete every on-disk version file not in ``referenced`` (a
+        set of (block, version) pairs: the union of all retained
+        checkpoint manifests' pinned version vectors plus the live
+        store's current versions). This sweeps superseded versions AND
+        orphans — files fully or partially written by a writer that
+        crashed before committing the manifest that would have
+        referenced them."""
+        for f in os.listdir(self.dir):
+            m = self._FILE_RE.match(f)
+            if m and (int(m.group(1)), int(m.group(2))) not in referenced:
+                try:
+                    os.remove(os.path.join(self.dir, f))
+                except OSError:
+                    pass
+
+
+class ZSlabStore:
+    """Storage protocol for per-block z slabs (shared base).
+
+    The live training loop only ever touches slabs through this surface:
+
+      ``read(b)``        check a slab out for staging (host-resident
+                         until ``release``/``write``)
+      ``release(b)``     host copy no longer needed (it was staged to
+                         device unchanged)
+      ``write(b, arr)``  store the swept slab back (checks the slab in
+                         and bumps its content stamp)
+      ``peek(b)`` / ``store[b]``   read-only copy, no residency tracking
+      ``materialize()``  full (B, DB, L) array — O(corpus) host memory,
+                         tests/export only
+
+    and the checkpoint system through:
+
+      ``sync_to(zbs)``       flush dirty slabs into a ``ZBlockStore``;
+                             returns the version vector to pin in the
+                             payload manifest
+      ``load_from(zbs, v)``  adopt checkpointed content
+      ``pin_versions(zbs, refs)`` / ``live_versions_in(zbs)``
+                             GC bookkeeping (which files manifests pin,
+                             which files are live state)
+
+    ``resident_slabs`` / ``high_water`` count slabs the store is holding
+    (or writing) in host memory; the streaming pipeline's bound is
+    ``prefetch_depth + writeback_depth + 1``.
+    """
+
+    kind = "abstract"
+
+    def __init__(self, num_blocks: int, block_shape: tuple):
+        self.num_blocks = num_blocks
+        self.block_shape = tuple(int(x) for x in block_shape)
+        self.stamps = np.zeros(num_blocks, np.int64)
+        self._res_lock = threading.Lock()
+        self._resident: dict[int, int] = {}
+        self.high_water = 0
+        for b in range(num_blocks):
+            self.touch(b)  # fresh zero content: every slab is save-dirty
+
+    # -- dirty tracking ----------------------------------------------------
+    def touch(self, b: int):
+        self.stamps[b] = _next_stamp()
+
+    # -- residency bookkeeping --------------------------------------------
+    def _checkout(self, b: int):
+        with self._res_lock:
+            self._resident[b] = self._resident.get(b, 0) + 1
+            self.high_water = max(self.high_water,
+                                  sum(self._resident.values()))
+
+    def _checkin(self, b: int):
+        with self._res_lock:
+            c = self._resident.get(b, 0) - 1
+            if c <= 0:
+                self._resident.pop(b, None)
+            else:
+                self._resident[b] = c
+
+    @property
+    def resident_slabs(self) -> int:
+        with self._res_lock:
+            return sum(self._resident.values())
+
+    # -- conveniences ------------------------------------------------------
+    def __getitem__(self, b: int) -> np.ndarray:
+        return self.peek(b)
+
+    def __array__(self, dtype=None, copy=None):
+        arr = self.materialize()
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def materialize(self) -> np.ndarray:
+        """Full (B, DB, L) int32 array. O(corpus) host memory — for
+        tests, exports, and small runs only."""
+        return np.stack([self.peek(b) for b in range(self.num_blocks)])
+
+    # -- subclass surface --------------------------------------------------
+    def read(self, b: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def release(self, b: int):
+        raise NotImplementedError
+
+    def write(self, b: int, arr: np.ndarray):
+        raise NotImplementedError
+
+    def peek(self, b: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def sync_to(self, zbs: ZBlockStore) -> tuple:
+        raise NotImplementedError
+
+    def load_from(self, zbs: ZBlockStore, versions: np.ndarray):
+        raise NotImplementedError
+
+    def blockstore_for(self, root_dir: str) -> Optional[ZBlockStore]:
+        """The store's own ``ZBlockStore`` when ``root_dir`` is its home
+        (live files double as checkpoint files there), else None."""
+        return None
+
+    def live_versions_in(self, zbs: ZBlockStore) -> set:
+        """(block, version) pairs in ``zbs`` that are live training
+        state (must survive GC even when no manifest references them)."""
+        return set()
+
+    def pin_versions(self, zbs: ZBlockStore, referenced: set):
+        """Record which versions in ``zbs`` retained checkpoint
+        manifests reference (protects them from eager reclamation)."""
+
+
+class RamZStore(ZSlabStore):
+    """All slabs resident in one host array — the pre-refactor behavior,
+    bitwise-identical: reads hand out views of the backing array and
+    writes store rows in place, so the training loop sees exactly the
+    same buffers it did when ``StreamingState.z_blocks`` was a raw
+    ndarray."""
+
+    kind = "ram"
+
+    def __init__(self, num_blocks: int, block_shape: tuple):
+        super().__init__(num_blocks, block_shape)
+        self._arr = np.zeros((num_blocks,) + self.block_shape, np.int32)
+        # the whole array is always resident — report that honestly
+        self.high_water = num_blocks
+
+    @property
+    def resident_slabs(self) -> int:
+        return self.num_blocks
+
+    def read(self, b: int) -> np.ndarray:
+        # the hot path: a view, exactly the buffer the pre-refactor loop
+        # staged (read/release/write callers never mutate it in place).
+        return self._arr[b]
+
+    def release(self, b: int):
+        pass
+
+    def write(self, b: int, arr: np.ndarray):
+        self._arr[b] = arr
+        self.touch(b)
+
+    def peek(self, b: int) -> np.ndarray:
+        # a copy, matching DiskZStore: peek is the public read surface,
+        # and a live view here would let callers mutate training state
+        # under one backend but not the other.
+        return self._arr[b].copy()
+
+    def materialize(self) -> np.ndarray:
+        # a copy, not the live backing array: DiskZStore.materialize is
+        # necessarily a fresh array, and an aliased "snapshot" that kept
+        # mutating under write-back would make the backends observably
+        # different.
+        return self._arr.copy()
+
+    def sync_to(self, zbs: ZBlockStore) -> tuple:
+        return zbs.sync(lambda b: self._arr[b], self.stamps)
+
+    def load_from(self, zbs: ZBlockStore, versions: np.ndarray):
+        self._arr = zbs.load(np.asarray(versions, np.int64),
+                             self.block_shape)
+        for b in range(self.num_blocks):
+            self.touch(b)  # loaded content IS the current content
+        zbs.mark_loaded(versions, self.stamps)
+
+
+class DiskZStore(ZSlabStore):
+    """Out-of-core slabs: immutable per-block version files under
+    ``<root>/zstore/``, with only in-flight slabs host-resident.
+
+    ``read`` loads the block's current version from disk (version -1 —
+    never swept — is an implicit zero slab, no file); ``write`` lands a
+    new version file and eagerly reclaims the superseded one unless a
+    retained checkpoint manifest pins it, so steady-state disk usage is
+    one file per block plus whatever retained checkpoints reference.
+
+    Checkpointing to ``root`` itself is near-free: ``sync_to`` returns
+    the current version vector with zero I/O, because every live write
+    already produced the immutable file the manifest will reference.
+    Restoring from ``root`` is equally free (adopt the version vector);
+    restoring from a foreign directory copies slabs over one at a time
+    (bounded host memory).
+
+    One live run per root directory: two stores writing the same root
+    concurrently would race the version counter.
+    """
+
+    kind = "disk"
+
+    def __init__(self, num_blocks: int, block_shape: tuple, *,
+                 root: Optional[str] = None):
+        super().__init__(num_blocks, block_shape)
+        if root is None:
+            root = tempfile.mkdtemp(prefix="repro-zslabs-")
+            self._cleanup = weakref.finalize(
+                self, shutil.rmtree, root, ignore_errors=True
+            )
+        self.root = os.path.abspath(root)
+        self._zbs = ZBlockStore(self.root, num_blocks)
+        self._pinned: set = set()
+
+    def read(self, b: int) -> np.ndarray:
+        self._checkout(b)
+        return self._zbs.load_block(b, int(self._zbs.versions[b]),
+                                    self.block_shape)
+
+    def release(self, b: int):
+        self._checkin(b)
+
+    def write(self, b: int, arr: np.ndarray):
+        self._checkout(b)  # the slab is host-resident while being written
+        try:
+            old = int(self._zbs.versions[b])
+            self.touch(b)
+            self._zbs.write_block(b, arr, int(self.stamps[b]))
+            if old >= 0 and (b, old) not in self._pinned:
+                self._zbs.delete(b, old)
+        finally:
+            self._checkin(b)
+
+    def peek(self, b: int) -> np.ndarray:
+        return self._zbs.load_block(b, int(self._zbs.versions[b]),
+                                    self.block_shape)
+
+    def sync_to(self, zbs: ZBlockStore) -> tuple:
+        if zbs is self._zbs:
+            # live files ARE the checkpoint files: pin, don't copy.
+            return self._zbs.versions.copy(), 0
+        return zbs.sync(self.peek, self.stamps)
+
+    def load_from(self, zbs: ZBlockStore, versions: np.ndarray):
+        versions = np.asarray(versions, np.int64)
+        if zbs is self._zbs:
+            # restore from home: adopt the vector, zero I/O.
+            for b in range(self.num_blocks):
+                self.touch(b)
+            self._zbs.mark_loaded(versions, self.stamps)
+            return
+        for b in range(self.num_blocks):
+            self.write(b, zbs.load_block(b, int(versions[b]),
+                                         self.block_shape))
+        zbs.mark_loaded(versions, self.stamps)
+
+    def blockstore_for(self, root_dir: str) -> Optional[ZBlockStore]:
+        if os.path.abspath(root_dir) == self.root:
+            return self._zbs
+        return None
+
+    def live_versions_in(self, zbs: ZBlockStore) -> set:
+        if zbs is not self._zbs:
+            return set()
+        return {(b, int(v)) for b, v in enumerate(self._zbs.versions)
+                if v >= 0}
+
+    def pin_versions(self, zbs: ZBlockStore, referenced: set):
+        if zbs is self._zbs:
+            self._pinned = set(referenced)
+
+
+def make_zslab_store(kind: str, num_blocks: int, block_shape: tuple, *,
+                     root: Optional[str] = None) -> ZSlabStore:
+    """Backend factory: ``kind`` is "ram" or "disk" (``root`` names the
+    disk backend's home directory — point it at the checkpoint directory
+    for near-free saves; default is a self-cleaning temp dir)."""
+    if kind == "ram":
+        return RamZStore(num_blocks, block_shape)
+    if kind == "disk":
+        return DiskZStore(num_blocks, block_shape, root=root)
+    raise ValueError(
+        f"unknown z-slab store kind {kind!r} (expected 'ram' or 'disk')"
+    )

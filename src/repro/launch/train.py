@@ -92,7 +92,10 @@ def train_lm(args):
 
 def train_hdp_streaming(args, corpus, sh):
     """Minibatch path: corpus swept block-by-block in bounded device
-    memory, resumable mid-epoch (block cursor + RNG in the checkpoint)."""
+    memory, resumable mid-epoch (block cursor + RNG in the checkpoint).
+    With --z-store disk, z slabs are out-of-core too (bounded host
+    memory): they live as per-block version files rooted at --z-dir
+    (default: the checkpoint dir, which makes saves near-free)."""
     from repro.core.streaming import StreamingHDP
     from repro.data.stream import ShardedCorpusStore
 
@@ -100,7 +103,8 @@ def train_hdp_streaming(args, corpus, sh):
     store = ShardedCorpusStore.from_corpus(
         corpus, args.block_docs, doc_multiple=n_dev
     )
-    stream = StreamingHDP(sh, store)
+    stream = StreamingHDP(sh, store, z_store=args.z_store,
+                          z_dir=args.z_dir or args.ckpt)
     state, resume_kw = (None, {})
     if args.ckpt:
         state, resume_kw = stream.restore(args.ckpt)
@@ -110,7 +114,8 @@ def train_hdp_streaming(args, corpus, sh):
     if state is None:
         state = stream.init_state(jax.random.key(args.seed))
     print(f"streaming: {store.num_blocks} blocks x {store.block_docs} docs "
-          f"(corpus {store.num_docs} docs, {store.num_tokens} tokens)")
+          f"(corpus {store.num_docs} docs, {store.num_tokens} tokens), "
+          f"z slabs in {state.z_blocks.kind}")
 
     history = []
     t0 = time.time()
@@ -133,6 +138,7 @@ def train_hdp_streaming(args, corpus, sh):
     print(json.dumps({
         "corpus": args.hdp, "tokens": store.num_tokens, "mode": "streaming",
         "blocks": store.num_blocks, "iters": args.iters,
+        "z_store": state.z_blocks.kind,
         "sec_per_iter": round(dt / args.iters, 3),
         "tokens_per_s": round(store.num_tokens * args.iters / dt, 1),
     }))
@@ -226,6 +232,15 @@ def main():
                          "device memory; required beyond-device-memory runs)")
     ap.add_argument("--block-docs", type=int, default=4096,
                     help="documents per streaming block")
+    ap.add_argument("--z-store", default=None, choices=["ram", "disk"],
+                    help="z-slab backend (streaming only): 'ram' keeps "
+                         "all slabs host-resident, 'disk' keeps only "
+                         "in-flight slabs (out-of-core; >RAM corpora). "
+                         "Default: $REPRO_Z_STORE or ram")
+    ap.add_argument("--z-dir", default=None,
+                    help="disk z-store root (default: --ckpt dir when "
+                         "set, making checkpoint saves near-free, else "
+                         "a temp dir)")
     ap.add_argument("--ckpt-every-blocks", type=int, default=None,
                     help="mid-epoch checkpoint cadence (streaming only)")
     ap.add_argument("--ckpt", default=None)

@@ -10,6 +10,13 @@ device_puts them under the new shardings. Writes go to ``.tmp-step_<N>``
 and are renamed only when complete (atomic commit: a crash mid-write
 never corrupts the latest checkpoint). A retention policy keeps the most
 recent ``keep`` checkpoints.
+
+Payloads may *pin* externally-stored resources instead of embedding
+them: a small array in the payload (e.g. the streaming driver's
+``z_versions`` vector) names immutable files written BEFORE the atomic
+commit, so the manifest only ever references complete files. Consumers
+that garbage-collect such resources scan every retained manifest via
+``arrays_across_steps`` and keep the union of pinned references.
 """
 
 from __future__ import annotations
@@ -134,6 +141,23 @@ def load_array(ckpt_dir: str, step: int, key: str) -> np.ndarray:
     path = os.path.join(ckpt_dir, f"step_{step}",
                         key.replace("/", "__") + ".npy")
     return np.load(path)
+
+
+def arrays_across_steps(ckpt_dir: str, key: str) -> dict[int, np.ndarray]:
+    """``{step: stored array}`` for every retained checkpoint whose
+    manifest carries ``key`` (steps without it are skipped, not errors).
+
+    This is the *pinned-manifest scan* for payloads that reference
+    externally-stored resources instead of embedding them: a consumer
+    that garbage-collects such resources must keep everything any
+    retained manifest still pins — e.g. the streaming driver's per-block
+    z-slab version files, whose payloads pin a (B,) ``z_versions``
+    vector (core/streaming.py)."""
+    out = {}
+    for s in all_steps(ckpt_dir):
+        if key in manifest_keys(ckpt_dir, s):
+            out[s] = load_array(ckpt_dir, s, key)
+    return out
 
 
 def restore_flat(ckpt_dir: str, step: Optional[int] = None) -> dict[str, Any]:

@@ -104,7 +104,7 @@ def test_streaming_multiblock_delta_merge_exact(impl):
     st = stream.init_state(jax.random.key(0))
     for _ in range(2):
         st = stream.iteration(st)
-    z_all = jnp.asarray(st.z_blocks.reshape(-1, store.max_len))
+    z_all = jnp.asarray(st.z_blocks.materialize().reshape(-1, store.max_len))
     t_all = np.concatenate([b.tokens for b in store.blocks()])
     m_all = np.concatenate([b.mask for b in store.blocks()])
     n_re = H.count_n(z_all, jnp.asarray(t_all), jnp.asarray(m_all),

@@ -69,6 +69,59 @@ def test_prefetcher_preserves_order_and_propagates_errors():
         list(BlockPrefetcher(iter(range(10)), boom, depth=2))
 
 
+def test_prefetcher_pre_stage_order_bound_and_errors():
+    """The two-stage (pre -> stage) pipeline preserves order, bounds
+    in-flight items to ``depth`` across BOTH stages, and propagates
+    errors from either stage."""
+    import threading
+
+    in_flight = 0
+    peak = 0
+    lock = threading.Lock()
+
+    def pre(x):
+        nonlocal in_flight, peak
+        with lock:
+            in_flight += 1
+            peak = max(peak, in_flight)
+        return x
+
+    def consume():
+        out = []
+        for item in BlockPrefetcher(iter(range(20)), lambda x: x + 1,
+                                    depth=2, pre=pre):
+            nonlocal_done()
+            out.append(item)
+        return out
+
+    def nonlocal_done():
+        nonlocal in_flight
+        with lock:
+            in_flight -= 1
+
+    assert consume() == [x + 1 for x in range(20)]
+    # shared budget: at most depth items between pre-start and consumption
+    # (+1 slack: the consumer-side decrement runs just after the budget
+    # slot frees, so the reader may momentarily overlap it)
+    assert peak <= 3, peak
+
+    with pytest.raises(RuntimeError, match="pre failed"):
+        def bad_pre(x):
+            if x == 5:
+                raise RuntimeError("pre failed")
+            return x
+        list(BlockPrefetcher(iter(range(10)), lambda x: x, depth=2,
+                             pre=bad_pre))
+
+    with pytest.raises(RuntimeError, match="stage failed"):
+        def bad_stage(x):
+            if x == 5:
+                raise RuntimeError("stage failed")
+            return x
+        list(BlockPrefetcher(iter(range(10)), bad_stage, depth=2,
+                             pre=lambda x: x))
+
+
 # -- the tentpole equivalence claim -------------------------------------------
 
 @pytest.mark.parametrize("impl", ["sparse", "dense", "pallas"])
@@ -113,7 +166,7 @@ def test_streaming_multiblock_statistics_consistent(rng):
     st = stream.init_state(jax.random.key(0))
     for _ in range(3):
         st = stream.iteration(st)
-    z_all = jnp.asarray(st.z_blocks.reshape(-1, store.max_len))
+    z_all = jnp.asarray(st.z_blocks.materialize().reshape(-1, store.max_len))
     t_all, m_all = [], []
     for blk in store.blocks():
         t_all.append(blk.tokens)
@@ -222,7 +275,7 @@ def test_streaming_restore_rejects_legacy_z_blocks_format(rng):
         CKPT.save(d, 0, {
             "model": {"n": st.n, "phi": st.phi, "varphi": st.varphi,
                       "psi": st.psi, "l": st.l, "key": st.key, "it": st.it},
-            "z_blocks": st.z_blocks,
+            "z_blocks": st.z_blocks.materialize(),
             "cursor": np.int64(0),
         })
         with pytest.raises(ValueError, match="predates the incremental"):
@@ -244,3 +297,243 @@ def test_streaming_boundary_checkpoint_roundtrip(rng):
                 np.asarray(getattr(st, f)), np.asarray(getattr(restored, f))
             )
         np.testing.assert_array_equal(st.z_blocks, restored.z_blocks)
+
+
+# -- the pluggable z-slab store (ZSlabStore: ram | disk backends) -------------
+
+def _state_fields_equal(a, b):
+    for f in ("n", "phi", "varphi", "psi", "l"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), f
+        )
+    np.testing.assert_array_equal(
+        a.z_blocks.materialize(), b.z_blocks.materialize()
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(a.key)),
+        np.asarray(jax.random.key_data(b.key)),
+    )
+
+
+def test_disk_store_bitwise_equals_ram(rng):
+    """The out-of-core backend must produce bitwise-identical chains to
+    the resident-array backend (same keys, same slab contents), across
+    multi-block iterations."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    ram = StreamingHDP(sh, store, z_store="ram")
+    disk = StreamingHDP(sh, store, z_store="disk")
+    a = ram.init_state(jax.random.key(0))
+    b = disk.init_state(jax.random.key(0))
+    for _ in range(3):
+        a = ram.iteration(a)
+        b = disk.iteration(b)
+    _state_fields_equal(a, b)
+
+
+def test_disk_store_bounded_resident_slabs(rng):
+    """At most prefetch_depth + writeback_depth + 1 z slabs are ever
+    host-resident with the disk backend (store-level high-water mark):
+    the prefetch budget covers read-ahead through staging, plus the one
+    slab the write-back worker is flushing."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=80)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    assert store.num_blocks >= 10
+    stream = StreamingHDP(sh, store, z_store="disk")
+    st = stream.init_state(jax.random.key(0))
+    for _ in range(2):
+        st = stream.iteration(st)
+    bound = stream.prefetch_depth + stream.writeback_depth + 1
+    assert 0 < st.z_blocks.high_water <= bound, (
+        st.z_blocks.high_water, bound
+    )
+    assert st.z_blocks.high_water < store.num_blocks  # genuinely out-of-core
+
+
+def test_disk_home_checkpoint_is_near_free(rng):
+    """A DiskZStore homed at the checkpoint directory saves WITHOUT
+    copying any slab — the live version files are the checkpoint files;
+    the payload just pins the current version vector — and restores by
+    adopting the vector."""
+    import os
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    with tempfile.TemporaryDirectory() as d:
+        stream = StreamingHDP(sh, store, z_store="disk", z_dir=d)
+        st = stream.init_state(jax.random.key(0))
+        st = stream.iteration(st)
+        zdir = os.path.join(d, "zstore")
+        before = set(os.listdir(zdir))
+        stream.save(d, st)
+        assert set(os.listdir(zdir)) == before  # no slab was rewritten
+        z_ref = st.z_blocks.materialize()
+        restored, kw = stream.restore(d)
+        assert kw == {}
+        np.testing.assert_array_equal(z_ref, restored.z_blocks.materialize())
+        np.testing.assert_array_equal(np.asarray(st.n),
+                                      np.asarray(restored.n))
+        # the restored chain keeps training from adopted (not copied) slabs
+        restored = stream.iteration(restored)
+
+
+def test_switch_backend_via_checkpoint_bitwise(rng):
+    """ram -> save -> restore-as-disk -> iterate must equal the pure-ram
+    chain bitwise (and the reverse direction back to ram)."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    ram = StreamingHDP(sh, store, z_store="ram")
+    ref = ram.init_state(jax.random.key(0))
+    for _ in range(4):
+        ref = ram.iteration(ref)
+
+    other = ram.init_state(jax.random.key(0))
+    other = ram.iteration(other)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ram.save(d1, other)
+        disk = StreamingHDP(sh, store, z_store="disk")
+        mid, kw = disk.restore(d1)
+        assert kw == {}
+        mid = disk.iteration(mid)
+        disk.save(d2, mid)
+        back, kw = ram.restore(d2)
+        assert kw == {}
+        for _ in range(2):
+            back = ram.iteration(back)
+    _state_fields_equal(ref, back)
+
+
+def test_env_var_selects_backend(rng, monkeypatch):
+    from repro.data.zstore import DiskZStore, RamZStore
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=16)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    monkeypatch.setenv("REPRO_Z_STORE", "disk")
+    assert isinstance(StreamingHDP(sh, store).init_state(
+        jax.random.key(0)).z_blocks, DiskZStore)
+    monkeypatch.setenv("REPRO_Z_STORE", "ram")
+    assert isinstance(StreamingHDP(sh, store).init_state(
+        jax.random.key(0)).z_blocks, RamZStore)
+    with pytest.raises(ValueError, match="ram.*disk|disk.*ram"):
+        StreamingHDP(sh, store, z_store="tape")
+
+
+def test_disk_store_releases_checkouts_on_early_exit(rng):
+    """A mid-epoch stop discards pre-read slabs from the prefetch
+    pipeline; their checkouts must be released or resident accounting
+    leaks (and the documented bound silently degrades)."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=80)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store, z_store="disk")
+    st = stream.init_state(jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        r = stream.iteration(st, ckpt_dir=d, stop_after_blocks=2)
+        assert r is None
+    assert st.z_blocks.resident_slabs == 0, st.z_blocks._resident
+
+
+def test_zblockstore_write_block_never_overwrites_foreign_versions(rng):
+    """Two store instances on one directory (e.g. two chains
+    checkpointing into the same dir): a live write must never reuse —
+    and overwrite — a version number the other instance committed."""
+    import os
+
+    from repro.data.zstore import ZBlockStore
+
+    with tempfile.TemporaryDirectory() as d:
+        a = ZBlockStore(d, 2)
+        b = ZBlockStore(d, 2)
+        slab_a = np.full((4, 6), 1, np.int32)
+        slab_b = np.full((4, 6), 2, np.int32)
+        va = a.write_block(0, slab_a, stamp=1)
+        vb = b.write_block(0, slab_b, stamp=1)  # b's counter is stale
+        assert va != vb
+        np.testing.assert_array_equal(a.load_block(0, va), slab_a)
+        np.testing.assert_array_equal(b.load_block(0, vb), slab_b)
+        assert len(os.listdir(os.path.join(d, "zstore"))) == 2
+
+
+def test_zblockstore_gc_sweeps_orphan_versions(rng):
+    """Forged crash state: a version file written but never referenced
+    by any manifest (the writer died between the slab write and the
+    payload commit). Both the save path and the restore path must sweep
+    it, while every pinned version survives."""
+    import os
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=40)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(0))
+    st = stream.iteration(st)
+    with tempfile.TemporaryDirectory() as d:
+        stream.save(d, st)
+        zdir = os.path.join(d, "zstore")
+        committed = set(os.listdir(zdir))
+        # forge the crash: orphan version files no manifest references
+        orphans = ["block_0.v99.npy", "block_3.v99.npy"]
+        for f in orphans:
+            np.save(os.path.join(zdir, f),
+                    np.zeros((store.block_docs, store.max_len), np.int32))
+        # restore-time sweep (a crashed run that resumes but never saves
+        # again must not leak the orphans forever)
+        fresh = StreamingHDP(sh, store)  # new driver: no in-memory stamps
+        restored, _ = fresh.restore(d)
+        assert set(os.listdir(zdir)) == committed
+        np.testing.assert_array_equal(st.z_blocks, restored.z_blocks)
+        # save-time sweep as well
+        for f in orphans:
+            np.save(os.path.join(zdir, f),
+                    np.zeros((store.block_docs, store.max_len), np.int32))
+        st2 = fresh.iteration(restored)
+        fresh.save(d, st2)
+        names = set(os.listdir(zdir))
+        assert not any(f in names for f in orphans)
+        # every retained manifest still resolves on disk
+        from repro.train import checkpoint as CKPT
+        for s, vers in CKPT.arrays_across_steps(d, "z_versions").items():
+            for b, v in enumerate(vers):
+                assert os.path.exists(
+                    os.path.join(zdir, f"block_{b}.v{int(v)}.npy")), (s, b)
+
+
+def test_restore_pr2_era_checkpoint_format(rng):
+    """Compatibility freeze: a checkpoint laid out exactly as the
+    incremental-format PRs wrote it (per-block v0 files + z_versions
+    vector in the payload) restores bitwise under BOTH backends."""
+    import os
+
+    from repro.train import checkpoint as CKPT
+
+    corpus, mesh, cfg, sh = make_setup(rng, D=24)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store)
+    st = stream.init_state(jax.random.key(3))
+    z_forged = np.asarray(
+        rng.integers(0, cfg.K, size=(store.num_blocks, store.block_docs,
+                                     store.max_len)), np.int32)
+    with tempfile.TemporaryDirectory() as d:
+        zdir = os.path.join(d, "zstore")
+        os.makedirs(zdir)
+        for b in range(store.num_blocks):
+            np.save(os.path.join(zdir, f"block_{b}.v0.npy"), z_forged[b])
+        CKPT.save(d, 0, {
+            "model": {"n": st.n, "phi": st.phi, "varphi": st.varphi,
+                      "psi": st.psi, "l": st.l, "key": st.key, "it": st.it},
+            "z_versions": np.zeros(store.num_blocks, np.int64),
+            "z_shape": np.asarray([store.num_blocks, store.block_docs,
+                                   store.max_len], np.int64),
+            "cursor": np.int64(0),
+            "n_run": jnp.zeros((cfg.K, cfg.V), jnp.int32),
+            "dh_acc": jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32),
+        })
+        for backend in ("ram", "disk"):
+            drv = StreamingHDP(sh, store, z_store=backend)
+            restored, kw = drv.restore(d)
+            assert kw == {}
+            assert restored.z_blocks.kind == backend
+            np.testing.assert_array_equal(
+                z_forged, restored.z_blocks.materialize(), backend
+            )
+            np.testing.assert_array_equal(np.asarray(st.n),
+                                          np.asarray(restored.n))

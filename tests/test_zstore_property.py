@@ -1,0 +1,101 @@
+"""Hypothesis property tests for the pluggable z-slab store.
+
+For arbitrary schedules of (iterate, save, restore, switch-backend),
+a chain whose z slabs live behind ``DiskZStore`` — switching backends at
+every 'switch' op — must end in a state bitwise-equal to the same
+schedule run entirely on ``RamZStore``: same model arrays, same chain
+key, same slab contents. This is the storage-layer analogue of the
+z-step conformance contract: storage must be invisible to the chain.
+
+(The deterministic spot checks live in tests/test_streaming.py; this
+module is skipped when the optional ``hypothesis`` dep is absent.)
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdp as H
+from repro.core.sharded import ShardedHDP
+from repro.core.streaming import StreamingHDP
+from repro.data.stream import ShardedCorpusStore
+from repro.data.synthetic import planted_topics_corpus
+from repro.launch.mesh import make_host_mesh
+
+_SETUP = {}
+
+
+def _setup():
+    # one tiny two-block corpus + one driver per backend, shared by every
+    # example: jitted programs compile once for the whole module (drivers
+    # hold no chain state — each init_state/restore makes a fresh slab
+    # store).
+    if not _SETUP:
+        rng = np.random.default_rng(7)
+        corpus, _ = planted_topics_corpus(rng, D=16, V=24, K_true=3,
+                                          doc_len=(6, 12))
+        cfg = H.HDPConfig(K=8, V=24, bucket=8, z_impl="sparse", hist_cap=16)
+        sh = ShardedHDP(make_host_mesh(), cfg)
+        store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+        _SETUP["ram"] = StreamingHDP(sh, store, z_store="ram")
+        _SETUP["disk"] = StreamingHDP(sh, store, z_store="disk")
+    return _SETUP
+
+
+def _run_schedule(drivers, ops, seed, *, backend, switching, workdir):
+    """Drive one chain through the schedule. ``switching=False`` pins
+    ``backend`` for the whole run (the reference); ``switching=True``
+    flips ram<->disk at every 'switch' op by checkpointing into a fresh
+    subdir and restoring under the other backend."""
+    drv = drivers[backend]
+    state = drv.init_state(jax.random.key(seed))
+    ckpt = f"{workdir}/ckpt-{backend}-{int(switching)}"
+    have_ckpt = False
+    for i, op in enumerate(ops):
+        if op == "iterate":
+            state = drv.iteration(state)
+        elif op == "save":
+            drv.save(ckpt, state)
+            have_ckpt = True
+        elif op == "restore":
+            if have_ckpt:
+                state, kw = drv.restore(ckpt)
+                assert kw == {}
+        elif op == "switch" and switching:
+            hop = f"{workdir}/switch-{i}"
+            drv.save(hop, state)
+            backend = "disk" if backend == "ram" else "ram"
+            drv = drivers[backend]
+            state, kw = drv.restore(hop)
+            assert kw == {}
+    return state
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(
+        st.sampled_from(["iterate", "save", "restore", "switch"]),
+        min_size=1, max_size=8,
+    ),
+)
+def test_backend_invisible_under_random_schedules(seed, ops):
+    drivers = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        ref = _run_schedule(drivers, ops, seed, backend="ram",
+                            switching=False, workdir=d)
+        got = _run_schedule(drivers, ops, seed, backend="disk",
+                            switching=True, workdir=d)
+    for f in ("n", "phi", "varphi", "psi", "l", "it"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), f
+        )
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(ref.key)),
+        np.asarray(jax.random.key_data(got.key)),
+    )
+    np.testing.assert_array_equal(
+        ref.z_blocks.materialize(), got.z_blocks.materialize()
+    )
