@@ -21,12 +21,15 @@ import sys
 
 def _key(rec):
     # streaming records gained a z_store field with the pluggable slab
-    # store; older baselines without it were implicitly RAM-backed.
+    # store and a z_dtype field with packed slabs; older baselines
+    # without them were implicitly RAM-backed int32.
     z_store = rec.get("z_store")
-    if z_store is None and rec.get("mode") == "streaming":
-        z_store = "ram"
+    z_dtype = rec.get("z_dtype")
+    if rec.get("mode") == "streaming":
+        z_store = z_store or "ram"
+        z_dtype = z_dtype or "int32"
     return (rec.get("mode"), rec.get("z_impl") or rec.get("impl"),
-            z_store, rec.get("block_docs"), rec.get("workers"),
+            z_store, z_dtype, rec.get("block_docs"), rec.get("workers"),
             rec.get("slots"))
 
 
@@ -39,13 +42,22 @@ def _metric(rec):
     return None, None
 
 
+def _lane(key):
+    """Coarse (mode, z_store, z_dtype) lane of a record key: CI measures
+    each lane in its own process + check_bench call, so coverage warnings
+    must not fire across lanes."""
+    return key[0], key[2], key[3]
+
+
 def compare(fresh, baseline, threshold):
     base_by_key = {_key(r): r for r in baseline if _metric(r)[0]}
+    fresh_keys = set()
     regressions = []
     for rec in fresh:
         name, val = _metric(rec)
         if name is None:
             continue
+        fresh_keys.add(_key(rec))
         base = base_by_key.get(_key(rec))
         if base is None or name not in base:
             print(f"{_key(rec)}: no baseline record (new config?) — "
@@ -59,6 +71,18 @@ def compare(fresh, baseline, threshold):
             print(f"::warning title=bench regression::{line}")
         else:
             print(line)
+    # A baseline config the fresh artifact never measured is a silent
+    # coverage hole (e.g. a block size dropped from a CI bench lane) —
+    # surface it. Scoped to the lanes the fresh artifact actually ran,
+    # so a ram-lane run doesn't warn about disk/int32 records measured
+    # by the sibling CI steps.
+    fresh_lanes = {_lane(k) for k in fresh_keys}
+    for key, base in sorted(base_by_key.items(), key=str):
+        if _lane(key) in fresh_lanes and key not in fresh_keys:
+            name, val = _metric(base)
+            print(f"::warning title=baseline not re-measured::{key}: "
+                  f"baseline has {val:,} {name} but the fresh artifact "
+                  f"has no matching record")
     return regressions
 
 

@@ -77,16 +77,19 @@ def stream_bench(args):
         cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
                           z_impl=args.z_impl, hist_cap=128)
         stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
-                              z_store=args.z_store)
+                              z_store=args.z_store, z_pack=args.z_pack)
         state = stream.init_state(jax.random.key(0))
         state = stream.iteration(state)  # compile + warm cache
-        t0 = time.time()
+        bytes0 = state.z_blocks.bytes_written
+        t0 = time.perf_counter()
         for _ in range(args.iters):
             state = stream.iteration(state)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
+        wb_bytes = state.z_blocks.bytes_written - bytes0
         rec = {
             "mode": "streaming", "z_impl": args.z_impl,
             "z_store": state.z_blocks.kind,
+            "z_dtype": state.z_blocks.dtype.name,
             "block_docs": store.block_docs, "blocks": store.num_blocks,
             "tokens": store.num_tokens, "iters": args.iters,
             "sec_per_iter": round(dt / args.iters, 3),
@@ -94,12 +97,21 @@ def stream_bench(args):
                 dt / (args.iters * store.num_blocks), 4),
             "tokens_per_s": round(
                 store.num_tokens * args.iters / dt, 1),
+            "writeback_mb_per_iter": round(
+                wb_bytes / args.iters / 2 ** 20, 3),
             "peak_rss_mb": _peak_rss_mb(),
             "resident_z_slabs_hwm": int(state.z_blocks.high_water),
         }
-        print(f"block_docs={store.block_docs} [{rec['z_store']}]: "
-              f"{rec['tokens_per_s']:,} tok/s "
+        if args.phases:
+            # one serialized, phase-attributed iteration (bitwise the
+            # same chain; tokens_per_s above stays the overlapped number)
+            state, timers = stream.iteration_profiled(state)
+            rec["phases_s"] = timers.summary()
+            rec["phase_frac"] = timers.fractions()
+        print(f"block_docs={store.block_docs} [{rec['z_store']}/"
+              f"{rec['z_dtype']}]: {rec['tokens_per_s']:,} tok/s "
               f"({rec['sec_per_block']}s/block, "
+              f"wb {rec['writeback_mb_per_iter']} MB/iter, "
               f"peak RSS {rec['peak_rss_mb']} MB)", flush=True)
         results.append(rec)
         with open(args.out, "w") as f:
@@ -189,11 +201,11 @@ def serve_fleet_bench(args):
             # percentiles must describe the timed pass only — warm-up
             # completions include XLA compile time.
             fleet.router.reset_latencies()
-            t0 = time.time()
+            t0 = time.perf_counter()
             for i, doc in enumerate(docs):
                 fleet.submit(doc, seed=10_000 + i)
             fleet.run()
-            wall = time.time() - t0
+            wall = time.perf_counter() - t0
             s = fleet.stats_summary()
         rec = {
             "mode": "serve_fleet", "impl": args.z_impl,
@@ -235,6 +247,14 @@ def main():
                     help="z-slab backend for --stream (default: "
                          "$REPRO_Z_STORE or ram); 'disk' keeps only "
                          "in-flight slabs host-resident")
+    ap.add_argument("--z-pack", default=None, choices=["auto", "off"],
+                    help="bit-pack z slabs for --stream (default: "
+                         "$REPRO_Z_PACK or auto); 'off' pins int32 — "
+                         "the packed-vs-int32 byte-volume baseline")
+    ap.add_argument("--phases", action="store_true",
+                    help="attach a per-phase breakdown (one serialized "
+                         "profiled iteration per record; tokens_per_s "
+                         "stays the overlapped measurement)")
     ap.add_argument("--block-docs", type=int, nargs="+",
                     default=[64, 256, 1024])
     # serving-mode knobs (CPU-sized defaults so CI can run them)
@@ -267,13 +287,13 @@ def main():
     multi = args.mesh == "multi"
     results = []
     for label, kw in VARIANTS:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             rec = hdp_cell(args.cell, multi, **kw)
             rec["variant"] = label
         except Exception as e:
             rec = {"variant": label, "status": "error", "error": str(e)}
-        rec["wall_s"] = round(time.time() - t0, 1)
+        rec["wall_s"] = round(time.perf_counter() - t0, 1)
         coll = sum(rec.get("collectives", {}).values())
         print(f"{label}: {rec.get('status')} coll={coll/1e6:.0f}MB "
               f"({rec['wall_s']}s)", flush=True)

@@ -85,13 +85,13 @@ def main():
     multi = args.mesh == "multi"
     results = []
     for label, kw in variants:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             rec = lm_cell(arch, shape, multi, **kw)
             rec["variant"] = label
         except Exception as e:
             rec = {"variant": label, "status": "error", "error": str(e)}
-        rec["wall_s"] = round(time.time() - t0, 1)
+        rec["wall_s"] = round(time.perf_counter() - t0, 1)
         cc = rec.get("cost_corrected", {})
         coll = sum(v for k, v in cc.items() if str(k).startswith("coll/"))
         print(f"{label}: {rec.get('status')} flops={cc.get('flops', 0):.3g} "

@@ -1,0 +1,105 @@
+"""Per-phase roofline for the streaming HDP hot loop.
+
+Answers "which phase actually dominates?" with measured wall time
+instead of assumptions: runs ``StreamingHDP.iteration_profiled`` — the
+serialized, phase-attributed, bitwise-identical twin of the overlapped
+``iteration()`` — and records per-phase seconds (tables / corpus_read /
+z_read / h2d / sweep / merge / writeback / tail) for each requested
+z-step impl. The optimization loop the paper's speedups came from
+(attack the measured top cost) starts here.
+
+  PYTHONPATH=src python -m benchmarks.roofline_hdp --out BENCH_roofline.json
+  PYTHONPATH=src python -m benchmarks.roofline_hdp --z-impl sparse pallas
+
+Records land as ``mode="roofline"`` entries (one per impl) with the
+phase breakdown, the serialized wall time, and the write-back byte
+volume per iteration — the numbers the README "Raw speed" table quotes.
+Use ``./run.sh`` to reproduce with the pinned allocator/XLA environment.
+"""
+
+import argparse
+import json
+import time
+
+
+def roofline(args):
+    import jax
+    import numpy as np
+
+    from repro.core import hdp as H
+    from repro.core.sharded import ShardedHDP
+    from repro.core.streaming import StreamingHDP
+    from repro.data.stream import ShardedCorpusStore
+    from repro.data.synthetic import paper_corpus
+    from repro.launch.mesh import make_host_mesh
+    from repro.perf import PhaseTimers
+
+    rng = np.random.default_rng(0)
+    corpus = paper_corpus("ap", rng, scale=args.scale, max_len=args.max_len)
+    mesh = make_host_mesh()
+    n_dev = len(jax.devices())
+    v_pad = ((corpus.V + mesh.shape["model"] - 1)
+             // mesh.shape["model"]) * mesh.shape["model"]
+    store = ShardedCorpusStore.from_corpus(
+        corpus, args.block_docs, doc_multiple=n_dev
+    )
+    results = []
+    for z_impl in args.z_impl:
+        bucket = min(args.topics, args.max_len)
+        cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
+                          z_impl=z_impl, hist_cap=min(args.max_len, 128))
+        stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
+                              z_store=args.z_store, z_pack=args.z_pack)
+        state = stream.init_state(jax.random.key(0))
+        # warm-up compiles every jitted program so the measured phases
+        # are steady-state, not trace+compile time.
+        state, _ = stream.iteration_profiled(state)
+        bytes0 = state.z_blocks.bytes_written
+        timers = PhaseTimers()
+        t0 = time.perf_counter()
+        for _ in range(args.iters):
+            state, timers = stream.iteration_profiled(state, timers)
+        wall = time.perf_counter() - t0
+        wb_bytes = state.z_blocks.bytes_written - bytes0
+        rec = {
+            "mode": "roofline", "z_impl": z_impl,
+            "z_store": state.z_blocks.kind,
+            "z_dtype": state.z_blocks.dtype.name,
+            "K": args.topics, "block_docs": store.block_docs,
+            "blocks": store.num_blocks, "tokens": store.num_tokens,
+            "iters": args.iters,
+            "wall_s": round(wall, 3),
+            "phases_s": timers.summary(),
+            "phase_frac": timers.fractions(),
+            "phases_total_s": round(timers.total, 3),
+            "tokens_per_s_serialized": round(
+                store.num_tokens * args.iters / wall, 1),
+            "writeback_mb_per_iter": round(
+                wb_bytes / args.iters / 2 ** 20, 3),
+        }
+        top = max(timers.totals, key=timers.totals.get)
+        print(f"{z_impl}: {rec['wall_s']}s wall, top phase {top} "
+              f"({rec['phase_frac'][top]:.0%}) — {rec['phases_s']}",
+              flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_roofline.json")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--topics", type=int, default=100)
+    ap.add_argument("--block-docs", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--z-impl", nargs="+", default=["sparse", "pallas"])
+    ap.add_argument("--z-store", default=None, choices=["ram", "disk"])
+    ap.add_argument("--z-pack", default=None, choices=["auto", "off"])
+    roofline(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

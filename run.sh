@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Pinned runtime environment for benchmarks and training runs, so two
+# measurements of the same commit are comparable:
+#
+#   ./run.sh python -m benchmarks.roofline_hdp --out BENCH_roofline.json
+#   ./run.sh python -m benchmarks.perf_hdp --stream --phases --iters 3
+#   ./run.sh python -m repro.launch.train --hdp ap --stream --iters 50
+#
+# Without this wrapper, allocator choice and XLA host-device count vary
+# by machine and the bench numbers silently stop being comparable.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# tcmalloc beats glibc malloc on the slab-heavy streaming path (packed
+# z write-back churns many medium host buffers). Preload only when the
+# library exists so the wrapper stays portable to slim images.
+for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+  if [ -e "${_tcm}" ]; then
+    export LD_PRELOAD="${_tcm}"
+    # silence "large alloc" spam for slab-sized buffers
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+    break
+  fi
+done
+
+export TF_CPP_MIN_LOG_LEVEL=4   # mute TSL/XLA info+warning chatter
+
+# Benches and smokes see the REAL device count by default (the
+# committed BENCH_hdp.json numbers are single-device; see
+# tests/conftest.py for the same rule). Set REPRO_HOST_DEVICES=N to
+# fake an N-device CPU mesh (the multidevice-test idiom).
+if [ -n "${REPRO_HOST_DEVICES-}" ]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES} ${XLA_FLAGS-}"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+
+exec "$@"

@@ -70,6 +70,8 @@ class HDPConfig(NamedTuple):
     exact_phi: bool = False  # Algorithm 1: exact Dirichlet Phi instead of PPU
     hist_cap: int = 256      # P: per-(doc,topic) count cap for the l histogram
     unroll_z: bool = False   # unroll the in-document sweep (cost probes)
+    pallas_interpret: bool | None = None  # None: $REPRO_PALLAS_INTERPRET /
+    #                          backend default (kernels/hdp_z/ops.py)
 
 
 class HDPState(NamedTuple):
@@ -350,21 +352,29 @@ def init_state(
 
 
 def _z_step(cfg: HDPConfig, tokens, mask, z, phi, psi, uniforms):
-    """Dispatch to the configured z-step; every impl returns (z_new, m)."""
+    """Dispatch to the configured z-step.
+
+    Returns ``(z_new, m, dn)`` where dn is the fused (K, V) ``delta_n``
+    when the impl emits it in-sweep (pallas) and None otherwise — the
+    caller falls back to the separate ``delta_n`` scatter.
+    """
     if cfg.z_impl == "dense":
-        return z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, uniforms,
-                            unroll=cfg.unroll_z)
+        z_new, m = z_step_dense(tokens, mask, z, phi, psi, cfg.alpha,
+                                uniforms, unroll=cfg.unroll_z)
+        return z_new, m, None
     if cfg.z_impl == "sparse":
         q_a, aprob, aalias = build_alias_tables(phi, psi, cfg.alpha)
-        return z_step_sparse_tables(
+        z_new, m = z_step_sparse_tables(
             tokens, mask, z, phi, cfg.alpha, uniforms, cfg.bucket,
             q_a, aprob, aalias, unroll=cfg.unroll_z,
         )
+        return z_new, m, None
     if cfg.z_impl == "pallas":
         from repro.kernels.hdp_z import ops as zops
 
         return zops.z_step_pallas(
-            tokens, mask, z, phi, psi, cfg.alpha, uniforms, cfg.bucket
+            tokens, mask, z, phi, psi, cfg.alpha, uniforms, cfg.bucket,
+            interpret=cfg.pallas_interpret, emit_delta=True,
         )
     raise ValueError(f"unknown z_impl {cfg.z_impl!r}")
 
@@ -385,9 +395,11 @@ def gibbs_iteration(
     #    histogram m, and n advances by the exact integer delta over
     #    changed tokens — no from-zero recount (see module docstring).
     uniforms = jax.random.uniform(k_u, tokens.shape + (3,), jnp.float32)
-    z, m = _z_step(cfg, tokens, mask, state.z, phi, state.psi, uniforms)
+    z, m, dn = _z_step(cfg, tokens, mask, state.z, phi, state.psi, uniforms)
 
-    n = state.n + delta_n(state.z, z, tokens, mask, cfg.K, cfg.V)
+    if dn is None:
+        dn = delta_n(state.z, z, tokens, mask, cfg.K, cfg.V)
+    n = state.n + dn
     dh = d_histogram(m, cfg.hist_cap)
 
     # 3. l-step (binomial trick; parallel over topics, constant in D/N)

@@ -188,7 +188,10 @@ class ShardedHDP:
 
     def _z_sweep(self, ztables, z, tokens, mask, psi, k_u):
         """Step 4: z-step on the local document shard (no communication).
-        Returns ``(z_new, m)`` — every impl emits its per-doc histogram.
+        Returns ``(z_new, m, dn)`` — every impl emits its per-doc
+        histogram; the pallas kernel additionally emits the fused (K, V)
+        ``delta_n`` (dn is None for dense/sparse, and ``_block_stats``
+        falls back to the separate scatter).
 
         ``k_u`` must already be block-specific for streaming; the
         per-device fold happens here so a single-block stream consumes
@@ -205,19 +208,22 @@ class ShardedHDP:
             q_a, fpack, ipack = ztables
             return zops.hdp_z_pallas(
                 tokens, mask, z, u, q_a, fpack, ipack, kk=cfg.K,
-                interpret=True,
+                interpret=zops.resolve_interpret(cfg.pallas_interpret),
+                emit_delta=True,
             )
         if cfg.z_impl == "dense":
             (phi,) = ztables
-            return H.z_step_dense(tokens, mask, z, phi, psi, cfg.alpha, u,
-                                  unroll=cfg.unroll_z)
+            z_new, m = H.z_step_dense(tokens, mask, z, phi, psi, cfg.alpha,
+                                      u, unroll=cfg.unroll_z)
+            return z_new, m, None
         phi, q_a, aprob, aalias = ztables
-        return H.z_step_sparse_tables(
+        z_new, m = H.z_step_sparse_tables(
             tokens, mask, z, phi, cfg.alpha, u, cfg.bucket,
             q_a, aprob, aalias, unroll=cfg.unroll_z,
         )
+        return z_new, m, None
 
-    def _block_stats(self, z_old, z_new, m, tokens, mask):
+    def _block_stats(self, z_old, z_new, m, tokens, mask, dn=None):
         """Steps 5-7a: sufficient-statistic *deltas* for one block.
 
         Returns (dn_shard, dh) — the vocab-sharded exact integer update
@@ -226,10 +232,13 @@ class ShardedHDP:
         from the sweep-emitted m. Both are pure sums over documents, so
         per-block results merge by addition (exactly: integer
         arithmetic throughout). No count_n / doc_topic_counts recompute
-        happens here — the sweep already holds both.
+        happens here — the sweep already holds both, and when the sweep
+        fused the delta scatter too (``dn`` not None) even the separate
+        ``delta_n`` pass disappears.
         """
         cfg = self.cfg
-        dn_local = H.delta_n(z_old, z_new, tokens, mask, cfg.K, cfg.V)
+        dn_local = (H.delta_n(z_old, z_new, tokens, mask, cfg.K, cfg.V)
+                    if dn is None else dn)
         dn_shard = jax.lax.psum_scatter(
             dn_local, self.model_axis, scatter_dimension=1, tiled=True
         )
@@ -246,8 +255,8 @@ class ShardedHDP:
         phi_shard, varphi_shard, ztables = self._phi_tables(
             n_shard, psi, k_phi
         )
-        z_new, m = self._z_sweep(ztables, z, tokens, mask, psi, k_u)
-        dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask)
+        z_new, m, dn = self._z_sweep(ztables, z, tokens, mask, psi, k_u)
+        dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask, dn=dn)
         z = z_new
         n_shard = n_shard + dn_shard
 
@@ -328,8 +337,8 @@ class ShardedHDP:
         s = self.specs()
 
         def local(ztables, z, tokens, mask, psi, k_ub):
-            z_new, m = self._z_sweep(ztables, z, tokens, mask, psi, k_ub)
-            dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask)
+            z_new, m, dn = self._z_sweep(ztables, z, tokens, mask, psi, k_ub)
+            dn_shard, dh = self._block_stats(z, z_new, m, tokens, mask, dn=dn)
             return z_new, dn_shard, dh
 
         return compat.shard_map(

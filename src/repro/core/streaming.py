@@ -78,7 +78,7 @@ from repro.core.stick import gem_prior_sample, sample_l, sample_psi
 from repro.data.stream import (BlockPrefetcher, BlockWriteback,
                                ShardedCorpusStore)
 from repro.data.zstore import (ZBlockStore, ZSlabStore,  # noqa: F401
-                               make_zslab_store)
+                               make_zslab_store, pack_dtype_for)
 from repro.train import checkpoint as CKPT
 
 
@@ -108,12 +108,20 @@ class StreamingHDP:
     backend's version files — point it at the checkpoint directory to
     make saves near-free (live files double as checkpoint files); the
     default is a self-cleaning temp dir. One live run per ``z_dir``.
+
+    ``z_pack`` ("auto" | "off"; default: the ``REPRO_Z_PACK`` env var,
+    else "auto") bit-packs the slabs to ``pack_dtype_for(K)`` — uint8
+    for K* <= 256, uint16 for K* <= 65536: the H2D staging copy, the D2H
+    write-back, and the disk backend's version files all move packed
+    bytes (up to 4x less traffic), with exact narrow/widen casts on
+    device, so the sampled chain is bitwise-identical to ``"off"``.
     """
 
     def __init__(self, sharded: ShardedHDP, store: ShardedCorpusStore, *,
                  prefetch_depth: int = 2, writeback_depth: int = 2,
                  z_store: Union[str, None] = None,
-                 z_dir: Optional[str] = None):
+                 z_dir: Optional[str] = None,
+                 z_pack: Union[str, None] = None):
         self.sh = sharded
         self.cfg = sharded.cfg
         self.store = store
@@ -128,6 +136,15 @@ class StreamingHDP:
             )
         self.z_store = z_store
         self.z_dir = z_dir
+        if z_pack is None:
+            z_pack = os.environ.get("REPRO_Z_PACK", "auto")
+        if z_pack not in ("auto", "off"):
+            raise ValueError(
+                f"z_pack must be 'auto' or 'off', got {z_pack!r}"
+            )
+        self.z_pack = z_pack
+        self.z_dtype = (pack_dtype_for(self.cfg.K) if z_pack == "auto"
+                        else np.dtype(np.int32))
         ss = sharded.state_shardings()
         ts, ms = sharded.corpus_shardings()
         self._z_sh, self._n_sh = ss.z, ss.n
@@ -148,6 +165,12 @@ class StreamingHDP:
                 lambda l: (l, sample_psi(k_psi, l, cfg.gamma))
             )(sample_l(k_l, dh, psi, cfg.alpha))
         )
+        # packed-slab casts, on device: the H2D copy moves packed bytes
+        # and widens to the sampler's int32 there; the swept block
+        # narrows before the D2H write-back. Exact for values < K.
+        self._widen_fn = jax.jit(lambda z: z.astype(jnp.int32))
+        _zdt = self.z_dtype
+        self._narrow_fn = jax.jit(lambda z: z.astype(_zdt))
         # foreign-dir checkpoint stores (save dirs that are NOT a disk
         # slab store's home); slab stores track their own dirty stamps.
         self._zstores: dict[str, ZBlockStore] = {}
@@ -156,6 +179,7 @@ class StreamingHDP:
         return make_zslab_store(
             self.z_store, self.store.num_blocks,
             (self.store.block_docs, self.store.max_len), root=self.z_dir,
+            dtype=self.z_dtype,
         )
 
     def _zstore(self, ckpt_dir: str, slab: ZSlabStore) -> ZBlockStore:
@@ -215,13 +239,20 @@ class StreamingHDP:
         def read_z(blk):
             return blk, z_store.read(blk.index)
 
+        packed = self.z_dtype != np.int32
+
         def stage(item):
             blk, z = item
+            # packed slabs cross H2D at their packed width and widen to
+            # the sampler's int32 on device (exact for values < K).
+            z_dev = jax.device_put(jnp.asarray(z), self._z_sh)
+            if packed:
+                z_dev = self._widen_fn(z_dev)
             out = (
                 blk.index,
                 jax.device_put(jnp.asarray(blk.tokens), self._ts),
                 jax.device_put(jnp.asarray(blk.mask), self._ms),
-                jax.device_put(jnp.asarray(z), self._z_sh),
+                z_dev,
             )
             z_store.release(blk.index)  # device copy exists now
             return out
@@ -299,7 +330,10 @@ class StreamingHDP:
                     ztables, z_b, tokens_b, mask_b, state.psi, k_ub
                 )
                 n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
-                writer.submit(b, z_b)
+                # narrow on device so the write-back D2H moves packed
+                # bytes (the slab store lands them as-is).
+                writer.submit(b, z_b if self.z_dtype == np.int32
+                              else self._narrow_fn(z_b))
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
@@ -323,6 +357,76 @@ class StreamingHDP:
             n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
             key=key, it=state.it + 1, z_blocks=z_store,
         )
+
+    def iteration_profiled(self, state: StreamingState, timers=None):
+        """One Gibbs iteration with per-phase wall-time attribution.
+
+        Bitwise-identical to ``iteration()`` — same jitted programs,
+        same key schedule, same slab store — but fully serialized: no
+        prefetch/write-back threads, and an explicit device sync at
+        every phase boundary, so each span of the returned
+        ``PhaseTimers`` measures exactly one pipeline phase (tables /
+        corpus_read / z_read / h2d / sweep / merge / writeback / tail)
+        and the spans sum to ~the serialized wall time. Use it to answer
+        "which phase dominates?" (benchmarks/roofline_hdp.py); use
+        ``iteration()`` for throughput — overlap is the whole point
+        there.
+
+        Returns ``(state', timers)``.
+        """
+        from repro.perf import PhaseTimers
+
+        cfg = self.cfg
+        if timers is None:
+            timers = PhaseTimers()
+        key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
+        with timers.phase("tables"):
+            phi_shard, varphi_shard, ztables = self._phi_fn(
+                state.n, state.psi, k_phi
+            )
+            jax.block_until_ready(ztables)
+        n_run = state.n
+        dh_acc = jax.device_put(
+            jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32), self._repl_sh)
+        z_store = state.z_blocks
+        packed = self.z_dtype != np.int32
+        blocks = self.store.blocks()
+        while True:
+            with timers.phase("corpus_read"):
+                blk = next(blocks, None)
+            if blk is None:
+                break
+            b = blk.index
+            with timers.phase("z_read"):
+                z_host = z_store.read(b)
+            with timers.phase("h2d"):
+                tokens_b = jax.device_put(jnp.asarray(blk.tokens), self._ts)
+                mask_b = jax.device_put(jnp.asarray(blk.mask), self._ms)
+                z_b = jax.device_put(jnp.asarray(z_host), self._z_sh)
+                if packed:
+                    z_b = self._widen_fn(z_b)
+                jax.block_until_ready((tokens_b, mask_b, z_b))
+                z_store.release(b)
+            k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
+            with timers.phase("sweep"):
+                z_b, dn_c, dh_c = self._z_fn(
+                    ztables, z_b, tokens_b, mask_b, state.psi, k_ub
+                )
+                jax.block_until_ready(z_b)
+            with timers.phase("merge"):
+                n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
+                jax.block_until_ready(n_run)
+            with timers.phase("writeback"):
+                z_store.write(
+                    b, np.asarray(z_b if not packed
+                                  else self._narrow_fn(z_b)))
+        with timers.phase("tail"):
+            l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
+            jax.block_until_ready(psi)
+        return StreamingState(
+            n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
+            key=key, it=state.it + 1, z_blocks=z_store,
+        ), timers
 
     def run(
         self, state: StreamingState, iters: int, *,

@@ -26,6 +26,18 @@ produce bitwise-identical training states under any interleaving of
 iterations, mid-epoch saves, and restores (tests/test_zstore_property.py
 drives random schedules of exactly those operations).
 
+Bit-packing: z values are topic indices in [0, K*), so slabs can live in
+uint8 (K* <= 256) or uint16 (K* <= 65536) instead of int32 — pass
+``dtype=pack_dtype_for(K)`` to the store. Packing is a pure storage/
+transport representation: ``peek``/``materialize`` still hand out int32
+(the sampler's working dtype), narrowing/widening are exact for values
+< K*, and version files written at any dtype load back interchangeably
+(``load_block`` casts). The hot-path surfaces — ``read`` (what the
+streaming driver stages H2D) and ``write`` (what the write-back thread
+lands) — move packed bytes, cutting slab I/O and transfer volume up to
+4x; ``bytes_written`` counts exactly those landed bytes so benchmarks
+can assert the saving (benchmarks/perf_hdp.py).
+
 Consistency contract shared with the checkpoint layer
 (train/checkpoint.py): version files are immutable and committed
 manifests only ever reference files that were fully written before the
@@ -60,6 +72,18 @@ def _next_stamp() -> int:
     with _STAMP_LOCK:
         _STAMP += 1
         return _STAMP
+
+
+def pack_dtype_for(k: int) -> np.dtype:
+    """Narrowest unsigned dtype that holds topic indices in [0, k):
+    uint8 for K* <= 256, uint16 for K* <= 65536, else int32 (no packing).
+    Narrow/widen round-trips are exact for every legal z value, so packed
+    slabs are bitwise-interchangeable with int32 ones."""
+    if k <= 2 ** 8:
+        return np.dtype(np.uint8)
+    if k <= 2 ** 16:
+        return np.dtype(np.uint16)
+    return np.dtype(np.int32)
 
 
 class ZBlockStore:
@@ -122,7 +146,10 @@ class ZBlockStore:
             self._rescan_next_ver()
             ver = self._next_ver
         self._next_ver = ver + 1
-        np.save(self._path(b, ver), np.asarray(arr, np.int32))
+        a = np.asarray(arr)
+        if a.dtype not in (np.uint8, np.uint16, np.int32):
+            a = a.astype(np.int32)
+        np.save(self._path(b, ver), a)
         self.versions[b] = ver
         self.written_stamp[b] = stamp
         return ver
@@ -149,24 +176,30 @@ class ZBlockStore:
         return self.versions.copy(), wrote
 
     def load_block(self, b: int, ver: int,
-                   block_shape: Optional[tuple] = None) -> np.ndarray:
-        """One slab at its recorded version; version -1 is the implicit
-        zero slab (needs ``block_shape``)."""
+                   block_shape: Optional[tuple] = None,
+                   dtype=np.int32) -> np.ndarray:
+        """One slab at its recorded version, cast to ``dtype``; version
+        -1 is the implicit zero slab (needs ``block_shape``). Version
+        files written at a different dtype (e.g. an int32 checkpoint
+        restored into a packed store, or vice versa) load
+        interchangeably — topic indices fit every legal dtype."""
         if ver < 0:
             if block_shape is None:
                 raise ValueError(
                     f"block {b} recorded at version -1 (implicit zeros) "
                     "but no block_shape was provided"
                 )
-            return np.zeros(block_shape, np.int32)
-        return np.load(self._path(b, int(ver))).astype(np.int32)
+            return np.zeros(block_shape, dtype)
+        arr = np.load(self._path(b, int(ver)))
+        return arr if arr.dtype == dtype else arr.astype(dtype)
 
     def load(self, versions: np.ndarray,
-             block_shape: Optional[tuple] = None) -> np.ndarray:
+             block_shape: Optional[tuple] = None,
+             dtype=np.int32) -> np.ndarray:
         """Materialize every block at its recorded version into one
         (B, DB, L) array — the RAM-backend restore path; O(corpus) host
         memory by design."""
-        return np.stack([self.load_block(b, int(v), block_shape)
+        return np.stack([self.load_block(b, int(v), block_shape, dtype)
                          for b, v in enumerate(versions)])
 
     def delete(self, b: int, ver: int):
@@ -228,19 +261,32 @@ class ZSlabStore:
     ``resident_slabs`` / ``high_water`` count slabs the store is holding
     (or writing) in host memory; the streaming pipeline's bound is
     ``prefetch_depth + writeback_depth + 1``.
+
+    ``dtype`` is the storage dtype (``pack_dtype_for``): ``read`` hands
+    out packed slabs (the H2D transport representation), ``write``
+    narrows what it lands (counting the landed bytes in
+    ``bytes_written``), while ``peek``/``materialize`` always return
+    int32 — the sampler's working dtype.
     """
 
     kind = "abstract"
 
-    def __init__(self, num_blocks: int, block_shape: tuple):
+    def __init__(self, num_blocks: int, block_shape: tuple,
+                 dtype=np.int32):
         self.num_blocks = num_blocks
         self.block_shape = tuple(int(x) for x in block_shape)
+        self.dtype = np.dtype(dtype)
+        self.bytes_written = 0
         self.stamps = np.zeros(num_blocks, np.int64)
         self._res_lock = threading.Lock()
         self._resident: dict[int, int] = {}
         self.high_water = 0
         for b in range(num_blocks):
             self.touch(b)  # fresh zero content: every slab is save-dirty
+
+    def _packed(self, arr: np.ndarray) -> np.ndarray:
+        a = np.asarray(arr)
+        return a if a.dtype == self.dtype else a.astype(self.dtype)
 
     # -- dirty tracking ----------------------------------------------------
     def touch(self, b: int):
@@ -322,9 +368,10 @@ class RamZStore(ZSlabStore):
 
     kind = "ram"
 
-    def __init__(self, num_blocks: int, block_shape: tuple):
-        super().__init__(num_blocks, block_shape)
-        self._arr = np.zeros((num_blocks,) + self.block_shape, np.int32)
+    def __init__(self, num_blocks: int, block_shape: tuple,
+                 dtype=np.int32):
+        super().__init__(num_blocks, block_shape, dtype)
+        self._arr = np.zeros((num_blocks,) + self.block_shape, self.dtype)
         # the whole array is always resident — report that honestly
         self.high_water = num_blocks
 
@@ -335,34 +382,37 @@ class RamZStore(ZSlabStore):
     def read(self, b: int) -> np.ndarray:
         # the hot path: a view, exactly the buffer the pre-refactor loop
         # staged (read/release/write callers never mutate it in place).
+        # Packed stores hand out the packed view — the H2D copy moves
+        # dtype-sized bytes; the driver widens on device.
         return self._arr[b]
 
     def release(self, b: int):
         pass
 
     def write(self, b: int, arr: np.ndarray):
-        self._arr[b] = arr
+        self._arr[b] = self._packed(arr)
+        self.bytes_written += self._arr[b].nbytes
         self.touch(b)
 
     def peek(self, b: int) -> np.ndarray:
         # a copy, matching DiskZStore: peek is the public read surface,
         # and a live view here would let callers mutate training state
         # under one backend but not the other.
-        return self._arr[b].copy()
+        return self._arr[b].astype(np.int32)
 
     def materialize(self) -> np.ndarray:
         # a copy, not the live backing array: DiskZStore.materialize is
         # necessarily a fresh array, and an aliased "snapshot" that kept
         # mutating under write-back would make the backends observably
         # different.
-        return self._arr.copy()
+        return self._arr.astype(np.int32)
 
     def sync_to(self, zbs: ZBlockStore) -> tuple:
         return zbs.sync(lambda b: self._arr[b], self.stamps)
 
     def load_from(self, zbs: ZBlockStore, versions: np.ndarray):
         self._arr = zbs.load(np.asarray(versions, np.int64),
-                             self.block_shape)
+                             self.block_shape, self.dtype)
         for b in range(self.num_blocks):
             self.touch(b)  # loaded content IS the current content
         zbs.mark_loaded(versions, self.stamps)
@@ -392,8 +442,8 @@ class DiskZStore(ZSlabStore):
     kind = "disk"
 
     def __init__(self, num_blocks: int, block_shape: tuple, *,
-                 root: Optional[str] = None):
-        super().__init__(num_blocks, block_shape)
+                 root: Optional[str] = None, dtype=np.int32):
+        super().__init__(num_blocks, block_shape, dtype)
         if root is None:
             root = tempfile.mkdtemp(prefix="repro-zslabs-")
             self._cleanup = weakref.finalize(
@@ -405,8 +455,10 @@ class DiskZStore(ZSlabStore):
 
     def read(self, b: int) -> np.ndarray:
         self._checkout(b)
+        # packed stores keep packed files AND hand out packed slabs: the
+        # disk read and the H2D copy both move dtype-sized bytes.
         return self._zbs.load_block(b, int(self._zbs.versions[b]),
-                                    self.block_shape)
+                                    self.block_shape, self.dtype)
 
     def release(self, b: int):
         self._checkin(b)
@@ -416,7 +468,9 @@ class DiskZStore(ZSlabStore):
         try:
             old = int(self._zbs.versions[b])
             self.touch(b)
-            self._zbs.write_block(b, arr, int(self.stamps[b]))
+            packed = self._packed(arr)
+            self._zbs.write_block(b, packed, int(self.stamps[b]))
+            self.bytes_written += packed.nbytes
             if old >= 0 and (b, old) not in self._pinned:
                 self._zbs.delete(b, old)
         finally:
@@ -462,14 +516,17 @@ class DiskZStore(ZSlabStore):
 
 
 def make_zslab_store(kind: str, num_blocks: int, block_shape: tuple, *,
-                     root: Optional[str] = None) -> ZSlabStore:
+                     root: Optional[str] = None,
+                     dtype=np.int32) -> ZSlabStore:
     """Backend factory: ``kind`` is "ram" or "disk" (``root`` names the
     disk backend's home directory — point it at the checkpoint directory
-    for near-free saves; default is a self-cleaning temp dir)."""
+    for near-free saves; default is a self-cleaning temp dir).
+    ``dtype`` packs the slabs (``pack_dtype_for(K)``) — values are
+    bitwise-identical through any dtype that holds [0, K)."""
     if kind == "ram":
-        return RamZStore(num_blocks, block_shape)
+        return RamZStore(num_blocks, block_shape, dtype)
     if kind == "disk":
-        return DiskZStore(num_blocks, block_shape, root=root)
+        return DiskZStore(num_blocks, block_shape, root=root, dtype=dtype)
     raise ValueError(
         f"unknown z-slab store kind {kind!r} (expected 'ram' or 'disk')"
     )

@@ -32,6 +32,17 @@ Outputs follow the repo-wide z-step contract: ``(z_new, m)`` where m is
 the (D, K) per-document topic histogram of z_new, written from the
 kernel's VMEM-resident sweep carry after each document's sweep — the
 driver-side ``doc_topic_counts`` recompute is gone.
+
+With ``emit_delta=True`` the sweep additionally emits ``dn`` — the
+(K, V) exact integer update to the topic-word statistic over *changed*
+live tokens (+1 at (z_new, v), -1 at (z_old, v)) — accumulated in one
+output block that every grid program revisits (zeroed by program 0).
+``n + dn`` is bitwise-equal to a from-zero recount of z_new (integer
+scatter-adds commute), so the driver-side ``delta_n`` pass over the full
+(D, L) arrays disappears: sweep and statistic update are one kernel
+launch. VMEM note: the revisited delta block is K*V*4 bytes resident for
+the whole grid — at vocab-sharded or CPU-bench scales this is small;
+for huge unsharded (K, V) prefer the unfused path (emit_delta=False).
 """
 
 from __future__ import annotations
@@ -54,20 +65,33 @@ def _z_kernel(
     # HBM (ANY) inputs, DMA'd per token
     fpack_ref,    # (V, 2, W) f32
     ipack_ref,    # (V, 2, W) int32
-    # outputs
-    z_out_ref,    # (DB, L) int32
-    m_out_ref,    # (DB, K) int32 — final per-document histograms
-    # scratch
-    m_ref,        # (K,) int32 VMEM — per-document histogram
-    frow_ref,     # (2, W) f32 VMEM
-    irow_ref,     # (2, W) int32 VMEM
-    sem_ref,      # DMA semaphores (2,)
-    *,
+    # outputs (z_out, m_out, then dn when emit_delta), followed by scratch
+    *rest,
     kk: int,
     ww: int,
     ll: int,
     db: int,
+    emit_delta: bool,
 ):
+    if emit_delta:
+        (z_out_ref,   # (DB, L) int32
+         m_out_ref,   # (DB, K) int32 — final per-document histograms
+         dn_ref,      # (K, V) int32 — delta_n, one block revisited by all
+         m_ref,       # (K,) int32 VMEM — per-document histogram
+         frow_ref,    # (2, W) f32 VMEM
+         irow_ref,    # (2, W) int32 VMEM
+         sem_ref,     # DMA semaphores (2,)
+         ) = rest
+        # The dn block has a constant index map, so every grid program
+        # sees the same buffer: program 0 zeroes it, later programs
+        # accumulate into it (grid iteration is sequential per core).
+        @pl.when(pl.program_id(0) == 0)
+        def _init_dn():
+            dn_ref[...] = jnp.zeros_like(dn_ref)
+    else:
+        z_out_ref, m_out_ref, m_ref, frow_ref, irow_ref, sem_ref = rest
+        dn_ref = None
+
     z_out_ref[...] = z_in_ref[...]
 
     def doc_body(d, _):
@@ -138,6 +162,13 @@ def _z_kernel(
             k_new = jnp.where(live & (tot > 0), k_new, z_old).astype(jnp.int32)
 
             m_ref[k_new] = m_ref[k_new] + jnp.where(live, 1, 0)
+            if emit_delta:
+                # exact integer delta over *changed* live tokens; integer
+                # scatter-adds commute, so the accumulated dn satisfies
+                # n + dn == recount(z_new) bitwise (core/hdp.py delta_n).
+                inc = jnp.where(live & (k_new != z_old), 1, 0)
+                dn_ref[k_new, v] = dn_ref[k_new, v] + inc
+                dn_ref[z_old, v] = dn_ref[z_old, v] - inc
             z_out_ref[d, i] = k_new
             return 0
 
@@ -149,7 +180,9 @@ def _z_kernel(
     jax.lax.fori_loop(0, db, doc_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("kk", "doc_block", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("kk", "doc_block", "interpret", "emit_delta")
+)
 def hdp_z_pallas(
     tokens: jax.Array,   # (D, L) int32
     mask: jax.Array,     # (D, L) bool
@@ -162,7 +195,8 @@ def hdp_z_pallas(
     kk: int,
     doc_block: int = 8,
     interpret: bool = True,
-) -> tuple[jax.Array, jax.Array]:
+    emit_delta: bool = False,
+) -> tuple[jax.Array, ...]:
     d, l = tokens.shape
     v, _, w = fpack.shape
     db = min(doc_block, d)
@@ -183,8 +217,24 @@ def hdp_z_pallas(
     blk2 = lambda: pl.BlockSpec((db, l), lambda i: (i, 0))
     blk3 = lambda: pl.BlockSpec((db, l, 3), lambda i: (i, 0, 0))
 
-    z_out, m_out = pl.pallas_call(
-        functools.partial(_z_kernel, kk=kk, ww=w, ll=l, db=db),
+    out_specs = [
+        blk2(),
+        pl.BlockSpec((db, kk), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((d_pad, l), jnp.int32),
+        jax.ShapeDtypeStruct((d_pad, kk), jnp.int32),
+    ]
+    if emit_delta:
+        # one (K, V) block with a constant index map: every grid program
+        # revisits it, accumulating the changed-token scatters in place.
+        out_specs.append(pl.BlockSpec((kk, v), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((kk, v), jnp.int32))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _z_kernel, kk=kk, ww=w, ll=l, db=db, emit_delta=emit_delta
+        ),
         grid=grid,
         in_specs=[
             blk2(),  # tokens
@@ -195,14 +245,8 @@ def hdp_z_pallas(
             pl.BlockSpec(memory_space=pl.ANY),  # fpack (HBM)
             pl.BlockSpec(memory_space=pl.ANY),  # ipack (HBM)
         ],
-        out_specs=[
-            blk2(),
-            pl.BlockSpec((db, kk), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((d_pad, l), jnp.int32),
-            jax.ShapeDtypeStruct((d_pad, kk), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((kk,), jnp.int32),
             pltpu.VMEM((2, w), fpack.dtype),
@@ -211,4 +255,8 @@ def hdp_z_pallas(
         ],
         interpret=interpret,
     )(tokens, mask, z, uniforms, q_a, fpack, ipack)
+    if emit_delta:
+        z_out, m_out, dn = out
+        return z_out[:d], m_out[:d], dn
+    z_out, m_out = out
     return z_out[:d], m_out[:d]

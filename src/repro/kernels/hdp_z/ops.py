@@ -13,6 +13,7 @@ shards and all-gathered — (V, W) tables instead of the paper's dense
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,25 @@ import jax.numpy as jnp
 from repro.core.alias import alias_build
 from repro.kernels.hdp_z.hdp_z import hdp_z_pallas
 from repro.kernels.hdp_z.ref import hdp_z_ref
+
+_FALSY = ("0", "false", "no", "off", "")
+
+
+def resolve_interpret(explicit: bool | None = None) -> bool:
+    """Resolve the Pallas execution mode for this process.
+
+    Precedence: an explicit boolean (config field / kwarg) wins; else the
+    ``REPRO_PALLAS_INTERPRET`` env var; else interpret mode exactly when
+    the backend is not a TPU (the kernel only compiles on TPU — interpret
+    mode is the CPU/GPU conformance path). Called at trace time: the
+    result is a static argument of the jitted kernel wrapper.
+    """
+    if explicit is not None:
+        return bool(explicit)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in _FALSY
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("w", "compact", "order"))
@@ -82,25 +102,57 @@ def max_column_nnz(phi: jax.Array) -> jax.Array:
     return jnp.max(jnp.sum((phi > 0).astype(jnp.int32), axis=0))
 
 
-def z_step_pallas(
-    tokens, mask, z, phi, psi, alpha, uniforms, bucket, *, interpret=True
+@functools.partial(
+    jax.jit,
+    static_argnames=("bucket", "order", "compact", "interpret", "emit_delta"),
+)
+def _z_step_pallas_fused(
+    tokens, mask, z, phi, psi, alpha, uniforms,
+    *, bucket, order, compact, interpret, emit_delta,
 ):
-    """Drop-in z-step: builds tables then runs the kernel (W = bucket).
-
-    Returns ``(z_new, m)`` like every z-step (core/hdp.py docstring)."""
-    q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
+    """Table build + kernel as ONE jitted program: the alias epilogue
+    (top_k / argsort / alias partition) lowers on-device right before the
+    pallas_call, so there is no host round-trip between building the
+    word-sparse tables and sweeping with them."""
+    q_a, fpack, ipack = build_word_sparse_tables(
+        phi, psi, alpha, bucket, compact=compact, order=order
+    )
     return hdp_z_pallas(
         tokens, mask, z, uniforms, q_a, fpack, ipack,
-        kk=phi.shape[0], interpret=interpret,
+        kk=phi.shape[0], interpret=interpret, emit_delta=emit_delta,
+    )
+
+
+def z_step_pallas(
+    tokens, mask, z, phi, psi, alpha, uniforms, bucket, *,
+    order="value", compact=False, interpret=None, emit_delta=False,
+):
+    """Drop-in z-step: builds tables then runs the kernel (W = bucket),
+    fused into a single jitted dispatch (no host hop between the table
+    epilogue and the sweep).
+
+    ``order``/``compact`` select the table variant (see
+    ``build_word_sparse_tables``); ``interpret=None`` resolves via
+    ``resolve_interpret`` (env var / backend default). Returns
+    ``(z_new, m)`` like every z-step (core/hdp.py docstring), plus the
+    fused (K, V) ``delta_n`` when ``emit_delta=True``."""
+    return _z_step_pallas_fused(
+        tokens, mask, z, phi, psi, alpha, uniforms,
+        bucket=bucket, order=order, compact=compact,
+        interpret=resolve_interpret(interpret), emit_delta=emit_delta,
     )
 
 
 def z_step_ref(
-    tokens, mask, z, phi, psi, alpha, uniforms, bucket
+    tokens, mask, z, phi, psi, alpha, uniforms, bucket, *,
+    order="value", compact=False, emit_delta=False,
 ):
     """Same math via the pure-jnp oracle (bitwise-identical to the kernel);
-    returns ``(z_new, m)``."""
-    q_a, fpack, ipack = build_word_sparse_tables(phi, psi, alpha, bucket)
+    returns ``(z_new, m)`` (plus ``delta_n`` when ``emit_delta=True``)."""
+    q_a, fpack, ipack = build_word_sparse_tables(
+        phi, psi, alpha, bucket, compact=compact, order=order
+    )
     return hdp_z_ref(
-        tokens, mask, z, uniforms, q_a, fpack, ipack, kk=phi.shape[0]
+        tokens, mask, z, uniforms, q_a, fpack, ipack, kk=phi.shape[0],
+        emit_delta=emit_delta,
     )

@@ -23,7 +23,8 @@ def hdp_z_ref(
     ipack: jax.Array,     # (V, 2, W) int32
     *,
     kk: int,
-) -> tuple[jax.Array, jax.Array]:
+    emit_delta: bool = False,
+) -> tuple[jax.Array, ...]:
     w = fpack.shape[-1]
 
     def doc_sweep(tok_d, msk_d, z_d, u_d):
@@ -70,4 +71,19 @@ def hdp_z_ref(
 
         return jax.lax.fori_loop(0, tok_d.shape[0], body, (z_d, m))
 
-    return jax.vmap(doc_sweep)(tokens, mask, z, uniforms)
+    z_new, m = jax.vmap(doc_sweep)(tokens, mask, z, uniforms)
+    if not emit_delta:
+        return z_new, m
+    # delta_n over changed live tokens, inlined (same scatter as
+    # core/hdp.py delta_n — bitwise-equal by integer commutativity).
+    vv = q_a.shape[0]
+    ch = (mask & (z_new != z)).astype(jnp.int32).reshape(-1)
+    zo = jnp.where(mask, z, 0).reshape(-1)
+    zn = jnp.where(mask, z_new, 0).reshape(-1)
+    tt = jnp.where(mask, tokens, 0).reshape(-1)
+    dn = (
+        jnp.zeros((kk, vv), jnp.int32)
+        .at[zn, tt].add(ch)
+        .at[zo, tt].add(-ch)
+    )
+    return z_new, m, dn

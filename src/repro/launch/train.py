@@ -104,7 +104,8 @@ def train_hdp_streaming(args, corpus, sh):
         corpus, args.block_docs, doc_multiple=n_dev
     )
     stream = StreamingHDP(sh, store, z_store=args.z_store,
-                          z_dir=args.z_dir or args.ckpt)
+                          z_dir=args.z_dir or args.ckpt,
+                          z_pack=args.z_pack)
     state, resume_kw = (None, {})
     if args.ckpt:
         state, resume_kw = stream.restore(args.ckpt)
@@ -115,7 +116,7 @@ def train_hdp_streaming(args, corpus, sh):
         state = stream.init_state(jax.random.key(args.seed))
     print(f"streaming: {store.num_blocks} blocks x {store.block_docs} docs "
           f"(corpus {store.num_docs} docs, {store.num_tokens} tokens), "
-          f"z slabs in {state.z_blocks.kind}")
+          f"z slabs in {state.z_blocks.kind} as {state.z_blocks.dtype}")
 
     history = []
     t0 = time.time()
@@ -139,6 +140,7 @@ def train_hdp_streaming(args, corpus, sh):
         "corpus": args.hdp, "tokens": store.num_tokens, "mode": "streaming",
         "blocks": store.num_blocks, "iters": args.iters,
         "z_store": state.z_blocks.kind,
+        "z_dtype": state.z_blocks.dtype.name,
         "sec_per_iter": round(dt / args.iters, 3),
         "tokens_per_s": round(store.num_tokens * args.iters / dt, 1),
     }))
@@ -237,6 +239,11 @@ def main():
                          "all slabs host-resident, 'disk' keeps only "
                          "in-flight slabs (out-of-core; >RAM corpora). "
                          "Default: $REPRO_Z_STORE or ram")
+    ap.add_argument("--z-pack", default=None, choices=["auto", "off"],
+                    help="bit-pack z slabs to the narrowest dtype that "
+                         "holds [0, K) (streaming only; cuts H2D/D2H and "
+                         "disk bytes up to 4x, bitwise-identical chain). "
+                         "Default: $REPRO_Z_PACK or auto")
     ap.add_argument("--z-dir", default=None,
                     help="disk z-store root (default: --ckpt dir when "
                          "set, making checkpoint saves near-free, else "

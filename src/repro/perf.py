@@ -1,0 +1,56 @@
+"""Per-phase wall-time attribution for the streaming hot loop.
+
+``PhaseTimers`` is a tiny accumulator of named monotonic time spans:
+the profiled iteration (``StreamingHDP.iteration_profiled``) wraps each
+pipeline phase — table build, corpus read, z-slab read, H2D staging,
+sweep, delta merge, D2H write-back, iteration tail — in
+``timers.phase(name)`` with explicit device syncs at the boundaries, so
+the per-phase totals sum to (approximately) the serialized wall time
+and the roofline question "which phase actually dominates?" gets a
+measured answer instead of an assumed one (benchmarks/roofline_hdp.py).
+
+All timing uses ``time.perf_counter`` (monotonic): wall-clock steps
+(NTP) can never corrupt a span.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+class PhaseTimers:
+    """Accumulates exclusive wall time per named phase.
+
+    ``phase(name)`` is a re-entrant-free context manager; nesting two
+    phases would double-count, so the profiled loop keeps them strictly
+    sequential. ``summary()`` returns totals (seconds, rounded),
+    ``fractions()`` the share of the summed phase time.
+    """
+
+    def __init__(self):
+        self.totals: dict[str, float] = {}
+        self.counts: dict[str, int] = {}
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self.totals[name] = self.totals.get(name, 0.0) + dt
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    @property
+    def total(self) -> float:
+        return sum(self.totals.values())
+
+    def summary(self, ndigits: int = 4) -> dict[str, float]:
+        return {k: round(v, ndigits) for k, v in self.totals.items()}
+
+    def fractions(self, ndigits: int = 3) -> dict[str, float]:
+        tot = self.total
+        if tot <= 0:
+            return {k: 0.0 for k in self.totals}
+        return {k: round(v / tot, ndigits) for k, v in self.totals.items()}

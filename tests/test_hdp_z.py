@@ -97,6 +97,44 @@ def test_kernel_matches_dense_sweep_distribution(rng):
         np.testing.assert_allclose(fk, fd, atol=0.025)
 
 
+@pytest.mark.parametrize("order,compact", [
+    ("value", False), ("topic", False), ("value", True), ("topic", True),
+])
+def test_zstep_table_options_plumb_through_both_impls(rng, order, compact):
+    """order=/compact= must reach the table builder through BOTH public
+    z-step wrappers (regression: the kwargs used to be silently dropped
+    at the z_step_pallas boundary), and the fused delta_n must stay
+    bitwise-consistent with a recount under every table variant."""
+    from repro.core import hdp as H
+
+    k, v = 16, 40
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, k, v, 6, 24)
+    z_k, m_k, dn_k = zops.z_step_pallas(
+        tokens, mask, z0, phi, psi, 0.3, u, k,
+        order=order, compact=compact, emit_delta=True)
+    z_r, m_r, dn_r = zops.z_step_ref(
+        tokens, mask, z0, phi, psi, 0.3, u, k,
+        order=order, compact=compact, emit_delta=True)
+    np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+    np.testing.assert_array_equal(np.asarray(dn_k), np.asarray(dn_r))
+    np.testing.assert_array_equal(
+        np.asarray(dn_k),
+        np.asarray(H.delta_n(z0, z_k, tokens, mask, k, v)))
+
+
+def test_zstep_order_kwarg_actually_changes_samples(rng):
+    """Sanity that the plumbing is live: topic-ordered tables relayout
+    the alias structure, so the same uniforms land on (some) different
+    topics than value-ordered tables — same law, different map. If the
+    kwarg were dropped, both calls would be bitwise-identical."""
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, 24, 60, 16, 32)
+    z_val = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 16)[0]
+    z_top = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 16,
+                               order="topic")[0]
+    assert (np.asarray(z_val) != np.asarray(z_top)).any()
+
+
 @pytest.mark.parametrize("d", [3, 5, 7, 11, 13])
 def test_kernel_doc_padding_matches_oracle(rng, d):
     """Document counts prime/coprime with doc_block must not degrade the

@@ -1,0 +1,90 @@
+"""Per-phase roofline instrumentation: ``iteration_profiled`` must be a
+bitwise-identical, fully-attributed twin of the overlapped
+``iteration()`` — phases positive, spans summing to ~the serialized
+wall time — or the roofline numbers it feeds to
+benchmarks/roofline_hdp.py are fiction."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import hdp as H
+from repro.core.sharded import ShardedHDP
+from repro.core.streaming import StreamingHDP
+from repro.data.stream import ShardedCorpusStore
+from repro.data.synthetic import planted_topics_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.perf import PhaseTimers
+
+PHASES = {"tables", "corpus_read", "z_read", "h2d", "sweep", "merge",
+          "writeback", "tail"}
+
+
+def _driver(rng, impl="sparse"):
+    corpus, _ = planted_topics_corpus(rng, D=24, V=30, K_true=3,
+                                      doc_len=(8, 14))
+    cfg = H.HDPConfig(K=8, V=30, bucket=8, z_impl=impl, hist_cap=16)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    return StreamingHDP(ShardedHDP(make_host_mesh(), cfg), store)
+
+
+def test_profiled_iteration_bitwise_equals_overlapped(rng):
+    drv = _driver(rng)
+    s_ref = drv.init_state(jax.random.key(11))
+    s_prof = drv.init_state(jax.random.key(11))
+    for _ in range(2):
+        s_ref = drv.iteration(s_ref)
+        s_prof, _ = drv.iteration_profiled(s_prof)
+    for f in ("n", "phi", "varphi", "psi", "l", "it"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_prof, f)), f)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(s_ref.key)),
+        np.asarray(jax.random.key_data(s_prof.key)))
+    np.testing.assert_array_equal(
+        s_ref.z_blocks.materialize(), s_prof.z_blocks.materialize())
+
+
+def test_profiled_phases_cover_the_iteration(rng):
+    drv = _driver(rng)
+    state = drv.init_state(jax.random.key(7))
+    state, _ = drv.iteration_profiled(state)  # warm-up: compile once
+    t0 = time.perf_counter()
+    state, timers = drv.iteration_profiled(state)
+    wall = time.perf_counter() - t0
+    assert set(timers.totals) == PHASES
+    assert all(v > 0 for v in timers.totals.values())
+    # per-block phases ran once per block (+1 corpus_read for the
+    # exhausted-iterator probe)
+    nb = drv.store.num_blocks
+    assert timers.counts["sweep"] == nb
+    assert timers.counts["corpus_read"] == nb + 1
+    assert timers.counts["tables"] == timers.counts["tail"] == 1
+    # the spans tile the serialized call: nothing above wall, and no
+    # large unattributed gap (loose bound — CI clocks are noisy)
+    assert timers.total <= wall
+    assert timers.total >= 0.5 * wall
+    # accumulating across iterations keeps adding into the same timers
+    state, timers = drv.iteration_profiled(state, timers)
+    assert timers.counts["tables"] == 2
+
+
+def test_phase_timers_math():
+    t = PhaseTimers()
+    with t.phase("a"):
+        pass
+    with t.phase("a"):
+        pass
+    with t.phase("b"):
+        pass
+    assert t.counts == {"a": 2, "b": 1}
+    assert t.total == pytest.approx(sum(t.totals.values()))
+    assert sum(t.fractions().values()) == pytest.approx(1.0, abs=0.01)
+    assert set(t.summary()) == {"a", "b"}
+    # timers survive exceptions raised inside a phase
+    with pytest.raises(RuntimeError):
+        with t.phase("c"):
+            raise RuntimeError("boom")
+    assert t.counts["c"] == 1
