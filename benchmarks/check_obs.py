@@ -1,0 +1,180 @@
+"""Hard CI gate for the observability artifacts.
+
+Validates what ``--trace`` / ``--metrics`` actually wrote:
+
+  * ``--trace`` — the file is valid Chrome trace-event JSON (object
+    form, ``traceEvents`` key), has named thread tracks, complete
+    ("X") events on at least ``--min-tracks`` distinct tracks, and —
+    with ``--require-overlap A B`` — at least one pair of A/B spans
+    that genuinely overlap in time on DIFFERENT tracks (the streaming
+    pipeline's whole point; a serialized trace here means the overlap
+    regressed even if throughput numbers look plausible).
+  * ``--metrics`` — every line parses as a snapshot object matching
+    the schema in repro/obs/metrics.py (ts + self-describing metrics
+    list; histogram bucket_counts sized to len(le)+1), and required
+    metric names (``--require-metric``, repeatable) are present in the
+    final snapshot.
+
+Unlike check_bench (warn-only; CPU noise), schema validity is
+deterministic, so this gate exits non-zero on any violation.
+
+  PYTHONPATH=src python -m benchmarks.check_obs \
+      --trace /tmp/trace.json --min-tracks 2 \
+      --require-overlap sweep writeback \
+      --metrics /tmp/metrics.jsonl --require-metric train.iterations
+"""
+
+import argparse
+import json
+import sys
+
+_FAILED = False
+
+
+def _fail(msg: str):
+    global _FAILED
+    _FAILED = True
+    print(f"FAIL: {msg}")
+
+
+def check_trace(path: str, min_tracks: int, require_overlap):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return _fail(f"trace {path}: unreadable/invalid JSON ({e})")
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return _fail(f"trace {path}: missing traceEvents key")
+    evs = doc["traceEvents"]
+    tracks = {e["tid"]: e["args"]["name"] for e in evs
+              if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    complete = [e for e in evs if e.get("ph") == "X"]
+    for e in complete:
+        if not {"name", "ts", "dur", "tid", "pid"} <= set(e):
+            return _fail(f"trace {path}: malformed X event {e}")
+        if e["tid"] not in tracks:
+            return _fail(
+                f"trace {path}: span {e['name']!r} on unnamed tid "
+                f"{e['tid']} (missing thread_name metadata)"
+            )
+    span_tids = {e["tid"] for e in complete}
+    if len(span_tids) < min_tracks:
+        _fail(f"trace {path}: spans on {len(span_tids)} track(s), "
+              f"need >= {min_tracks} (overlapped pipeline missing?)")
+    # async begin/end events must pair up within (name, cat, id)
+    pairs = {}
+    for e in evs:
+        if e.get("ph") in ("b", "e"):
+            key = (e["name"], e.get("cat"), e.get("id"))
+            pairs[key] = pairs.get(key, 0) + (1 if e["ph"] == "b" else -1)
+    unbalanced = {k: v for k, v in pairs.items() if v != 0}
+    if unbalanced:
+        _fail(f"trace {path}: unbalanced async events {unbalanced}")
+    if require_overlap:
+        a_name, b_name = require_overlap
+
+        def intervals(name):
+            return [(e["ts"], e["ts"] + e["dur"], e["tid"])
+                    for e in complete if e["name"] == name]
+
+        a_sp, b_sp = intervals(a_name), intervals(b_name)
+        if not a_sp or not b_sp:
+            return _fail(
+                f"trace {path}: overlap check needs both {a_name!r} "
+                f"({len(a_sp)} spans) and {b_name!r} ({len(b_sp)} spans)"
+            )
+        hits = sum(
+            1
+            for a0, a1, at in a_sp
+            for b0, b1, bt in b_sp
+            if at != bt and max(a0, b0) < min(a1, b1)
+        )
+        if hits == 0:
+            return _fail(
+                f"trace {path}: no {a_name!r}/{b_name!r} overlap on "
+                "distinct tracks — the pipeline ran serialized"
+            )
+        print(f"trace ok: {len(complete)} spans on {len(span_tids)} "
+              f"tracks, {hits} {a_name}/{b_name} overlaps")
+    else:
+        print(f"trace ok: {len(complete)} spans on {len(span_tids)} "
+              "tracks")
+
+
+def check_metrics(path: str, require: list):
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        return _fail(f"metrics {path}: unreadable ({e})")
+    if not lines:
+        return _fail(f"metrics {path}: empty (no snapshots flushed)")
+    last = None
+    for i, line in enumerate(lines, 1):
+        try:
+            snap = json.loads(line)
+        except json.JSONDecodeError as e:
+            return _fail(f"metrics {path}:{i}: invalid JSON ({e})")
+        if set(snap) != {"ts", "metrics"}:
+            return _fail(
+                f"metrics {path}:{i}: keys {sorted(snap)}, "
+                "expected exactly ['metrics', 'ts']"
+            )
+        for m in snap["metrics"]:
+            kind = m.get("type")
+            if kind not in ("counter", "gauge", "histogram"):
+                return _fail(f"metrics {path}:{i}: bad type in {m}")
+            if not isinstance(m.get("name"), str) or \
+                    not isinstance(m.get("labels"), dict):
+                return _fail(f"metrics {path}:{i}: bad name/labels in {m}")
+            if kind == "histogram":
+                if len(m.get("bucket_counts", [])) != len(m.get("le", ())) + 1:
+                    return _fail(
+                        f"metrics {path}:{i}: histogram "
+                        f"{m['name']!r} bucket_counts/le mismatch"
+                    )
+                if sum(m["bucket_counts"]) != m.get("count"):
+                    return _fail(
+                        f"metrics {path}:{i}: histogram "
+                        f"{m['name']!r} count != sum(bucket_counts)"
+                    )
+            elif "value" not in m:
+                return _fail(f"metrics {path}:{i}: {kind} missing value")
+        last = snap
+    names = {m["name"] for m in last["metrics"]}
+    missing = [n for n in require if n not in names]
+    if missing:
+        _fail(f"metrics {path}: final snapshot missing required "
+              f"metrics {missing} (has {sorted(names)})")
+    else:
+        print(f"metrics ok: {len(lines)} snapshots, "
+              f"{len(last['metrics'])} metrics in the final one")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace JSON to validate")
+    ap.add_argument("--min-tracks", type=int, default=2,
+                    help="minimum distinct thread tracks carrying spans")
+    ap.add_argument("--require-overlap", nargs=2, default=None,
+                    metavar=("SPAN_A", "SPAN_B"),
+                    help="require >=1 time-overlapping A/B span pair on "
+                         "distinct tracks")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL to validate")
+    ap.add_argument("--require-metric", action="append", default=[],
+                    help="metric name that must appear in the final "
+                         "snapshot (repeatable)")
+    args = ap.parse_args()
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    if args.trace:
+        check_trace(args.trace, args.min_tracks, args.require_overlap)
+    if args.metrics:
+        check_metrics(args.metrics, args.require_metric)
+    sys.exit(1 if _FAILED else 0)
+
+
+if __name__ == "__main__":
+    main()

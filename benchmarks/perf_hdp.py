@@ -28,13 +28,31 @@ VARIANTS = [
 ]
 
 
+def _reset_peak_rss() -> bool:
+    """Reset the kernel's peak-RSS watermark (Linux: writing "5" to
+    /proc/self/clear_refs clears VmHWM), so each config's record is its
+    OWN peak instead of inheriting earlier configs' highs. Returns False
+    where unsupported (non-Linux / restricted procfs) — the fallback is
+    the old process-lifetime semantics."""
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+        return True
+    except OSError:
+        return False
+
+
 def _peak_rss_mb() -> float:
-    """Process-lifetime peak resident set size in MB (ru_maxrss is KB on
-    Linux, bytes on macOS). Monotone across variants measured in one
-    process — the record of a later variant inherits earlier peaks, so
-    the interesting signal is the FIRST record of a fresh process (CI
-    runs ram and disk benches as separate processes for exactly that
-    reason)."""
+    """Peak resident set size in MB since the last ``_reset_peak_rss``
+    (Linux VmHWM), falling back to process-lifetime ru_maxrss (KB on
+    Linux, bytes on macOS) where /proc is unavailable."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return round(int(line.split()[1]) / 1024, 1)  # KB
+    except OSError:
+        pass
     import resource
     import sys
 
@@ -80,6 +98,7 @@ def stream_bench(args):
                               z_store=args.z_store, z_pack=args.z_pack)
         state = stream.init_state(jax.random.key(0))
         state = stream.iteration(state)  # compile + warm cache
+        _reset_peak_rss()  # per-config peak, not inherited highs
         bytes0 = state.z_blocks.bytes_written
         t0 = time.perf_counter()
         for _ in range(args.iters):
@@ -269,19 +288,31 @@ def main():
     ap.add_argument("--train-docs", type=int, default=64)
     ap.add_argument("--train-iters", type=int, default=15)
     ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace of pipeline/serve spans")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append metrics-registry snapshots (JSONL)")
     args = ap.parse_args()
     if args.out is None:
         args.out = ("BENCH_hdp.json" if args.stream else
                     "BENCH_hdp_serve.json" if args.serve else
                     "BENCH_hdp_fleet.json" if args.serve_fleet else
                     "BENCH_hdp_dryrun.json")
-    if args.serve_fleet:
-        return serve_fleet_bench(args)
-    if args.serve:
-        return serve_bench(args)
-    if args.stream:
-        return stream_bench(args)
+    from repro import obs
+    obs.setup(trace=args.trace, metrics_path=args.metrics)
+    try:
+        if args.serve_fleet:
+            return serve_fleet_bench(args)
+        if args.serve:
+            return serve_bench(args)
+        if args.stream:
+            return stream_bench(args)
+        return dryrun_bench(args)
+    finally:
+        obs.finalize()
 
+
+def dryrun_bench(args):
     from repro.launch.dryrun import hdp_cell
 
     multi = args.mesh == "multi"

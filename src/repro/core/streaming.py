@@ -71,6 +71,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import hdp as H
 from repro.core.polya_urn import ppu_sample
 from repro.core.sharded import ShardedHDP
@@ -165,6 +166,11 @@ class StreamingHDP:
                 lambda l: (l, sample_psi(k_psi, l, cfg.gamma))
             )(sample_l(k_l, dh, psi, cfg.alpha))
         )
+        # model-health reductions, dispatched ONLY when a metrics sink
+        # is attached (obs.metrics_on()): the disabled path runs the
+        # exact same program sequence as an uninstrumented build.
+        self._nnz_fn = jax.jit(lambda acc, dn: acc + jnp.count_nonzero(dn))
+        self._kstar_fn = jax.jit(lambda n: jnp.sum(jnp.any(n > 0, axis=1)))
         # packed-slab casts, on device: the H2D copy moves packed bytes
         # and widens to the sampler's int32 there; the swept block
         # narrows before the D2H write-back. Exact for values < K.
@@ -236,25 +242,39 @@ class StreamingHDP:
         releases the host slab. The shared in-flight budget is
         ``prefetch_depth`` slabs."""
 
+        def blocks():
+            # corpus reads happen inside the prefetcher's pre thread
+            # (the iterator is consumed there); span them so memmap
+            # stalls show on that track.
+            tr = obs.tracer()
+            for b in range(start, self.store.num_blocks):
+                with tr.span("corpus_read", cat="pipeline", block=b):
+                    blk = self.store.block(b)
+                yield blk
+
         def read_z(blk):
-            return blk, z_store.read(blk.index)
+            with obs.tracer().span("z_read", cat="pipeline",
+                                   block=blk.index):
+                z = z_store.read(blk.index)
+            return blk, z
 
         packed = self.z_dtype != np.int32
 
         def stage(item):
             blk, z = item
-            # packed slabs cross H2D at their packed width and widen to
-            # the sampler's int32 on device (exact for values < K).
-            z_dev = jax.device_put(jnp.asarray(z), self._z_sh)
-            if packed:
-                z_dev = self._widen_fn(z_dev)
-            out = (
-                blk.index,
-                jax.device_put(jnp.asarray(blk.tokens), self._ts),
-                jax.device_put(jnp.asarray(blk.mask), self._ms),
-                z_dev,
-            )
-            z_store.release(blk.index)  # device copy exists now
+            with obs.tracer().span("h2d", cat="pipeline", block=blk.index):
+                # packed slabs cross H2D at their packed width and widen
+                # to the sampler's int32 on device (exact for values < K).
+                z_dev = jax.device_put(jnp.asarray(z), self._z_sh)
+                if packed:
+                    z_dev = self._widen_fn(z_dev)
+                out = (
+                    blk.index,
+                    jax.device_put(jnp.asarray(blk.tokens), self._ts),
+                    jax.device_put(jnp.asarray(blk.mask), self._ms),
+                    z_dev,
+                )
+                z_store.release(blk.index)  # device copy exists now
             return out
 
         def drop(item):
@@ -262,7 +282,7 @@ class StreamingHDP:
             # must check back in, or resident accounting leaks.
             z_store.release(item[0].index)
 
-        return BlockPrefetcher(self.store.blocks(start), stage,
+        return BlockPrefetcher(blocks(), stage,
                                depth=self.prefetch_depth, pre=read_z,
                                drop=drop)
 
@@ -299,11 +319,20 @@ class StreamingHDP:
                 "stop_after_blocks without ckpt_dir would drop the "
                 "partial sweep (z slabs are updated in place)"
             )
+        tr = obs.tracer()
+        # health reductions (K*, delta sparsity) cost extra device
+        # dispatches — run them only when a metrics sink is attached so
+        # the silent path stays bitwise-identical to an uninstrumented
+        # run.
+        health = obs.metrics_on()
+        dn_nnz = jnp.zeros((), jnp.int32) if health else None
         key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
         if ztables is None:
-            phi_shard, varphi_shard, ztables = self._phi_fn(
-                state.n, state.psi, k_phi
-            )
+            with tr.span("tables", cat="pipeline"):
+                phi_shard, varphi_shard, ztables = self._phi_fn(
+                    state.n, state.psi, k_phi
+                )
+            obs.metrics().counter("train.alias_rebuilds").inc()
         else:
             phi_shard, varphi_shard, ztables = ztables
         if n_run is None:
@@ -321,26 +350,41 @@ class StreamingHDP:
             z_store.write, depth=self.writeback_depth,
         )
         try:
-            for b, tokens_b, mask_b, z_b in staged:
+            staged_it = iter(staged)
+            while True:
+                # the wait for the next staged block is the driver-side
+                # pipeline bubble: a long span here means H2D staging
+                # (or the disk z read upstream) is not keeping up.
+                with tr.span("stage_wait", cat="pipeline"):
+                    item = next(staged_it, None)
+                if item is None:
+                    break
+                b, tokens_b, mask_b, z_b = item
                 # block 0 consumes k_u unchanged => a single-block stream
                 # is bitwise the monolithic sampler; later blocks fold
                 # their index.
                 k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
-                z_b, dn_c, dh_c = self._z_fn(
-                    ztables, z_b, tokens_b, mask_b, state.psi, k_ub
-                )
-                n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
+                with tr.span("sweep", cat="pipeline", block=b):
+                    z_b, dn_c, dh_c = self._z_fn(
+                        ztables, z_b, tokens_b, mask_b, state.psi, k_ub
+                    )
+                    n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
+                    if health:
+                        dn_nnz = self._nnz_fn(dn_nnz, dn_c)
                 # narrow on device so the write-back D2H moves packed
                 # bytes (the slab store lands them as-is).
-                writer.submit(b, z_b if self.z_dtype == np.int32
-                              else self._narrow_fn(z_b))
+                with tr.span("wb_submit", cat="pipeline", block=b):
+                    writer.submit(b, z_b if self.z_dtype == np.int32
+                                  else self._narrow_fn(z_b))
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
                         and cursor < self.store.num_blocks
                         and cursor % ckpt_every_blocks == 0):
-                    writer.flush()  # checkpoint reads the stored slabs
-                    self._save_partial(ckpt_dir, state, cursor, n_run, dh_acc)
+                    with tr.span("checkpoint", cat="pipeline", block=b):
+                        writer.flush()  # checkpoint reads the stored slabs
+                        self._save_partial(
+                            ckpt_dir, state, cursor, n_run, dh_acc)
                     saved_cursor = cursor
                 if stop_after_blocks is not None and done >= stop_after_blocks:
                     if cursor < self.store.num_blocks:
@@ -352,11 +396,40 @@ class StreamingHDP:
         finally:
             staged.close()  # unblock the prefetch workers on early exit
             writer.close()  # drain outstanding write-backs
-        l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
-        return StreamingState(
+        with tr.span("tail", cat="pipeline"):
+            l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
+        out = StreamingState(
             n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
             key=key, it=state.it + 1, z_blocks=z_store,
         )
+        self._publish_health(out, dn_nnz, done)
+        return out
+
+    def _publish_health(self, state: StreamingState, dn_nnz, blocks_done):
+        """Per-iteration model-health metrics into the global registry.
+
+        Cheap host-side counters/gauges are always maintained; the
+        device-derived gauges (live topic count K*, delta_n sparsity —
+        the "doubly sparse" quantities the method's speed rests on) are
+        only computed when ``iteration`` accumulated them, i.e. when a
+        metrics sink is attached. Ends with a rate-limited JSONL flush.
+        """
+        M = obs.metrics()
+        store = state.z_blocks
+        M.counter("train.iterations").inc()
+        M.counter("train.tokens_swept").inc(self.store.num_tokens)
+        M.gauge("train.it").set(int(state.it))
+        M.gauge("train.zstore_read_mb").set(
+            round(store.bytes_read / 2 ** 20, 3))
+        M.gauge("train.zstore_written_mb").set(
+            round(store.bytes_written / 2 ** 20, 3))
+        M.gauge("train.resident_z_slabs_hwm").set(int(store.high_water))
+        if dn_nnz is not None:
+            M.gauge("train.k_star").set(int(self._kstar_fn(state.n)))
+            denom = max(blocks_done, 1) * self.cfg.K * self.cfg.V
+            M.gauge("train.delta_nnz_frac").set(
+                round(int(dn_nnz) / denom, 6))
+        obs.flush_metrics()
 
     def iteration_profiled(self, state: StreamingState, timers=None):
         """One Gibbs iteration with per-phase wall-time attribution.

@@ -41,6 +41,7 @@ from typing import Iterator, NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.data.corpus import Corpus
 
 
@@ -155,6 +156,11 @@ class AsyncStage:
         )
         self._thread.start()
 
+    def _span(self, item):
+        """Trace span wrapping one work item (subclasses refine the
+        name/args); the no-op singleton when tracing is disabled."""
+        return obs.tracer().span(self._name, cat="pipeline")
+
     def _worker(self):
         while True:
             item = self._q.get()
@@ -162,7 +168,8 @@ class AsyncStage:
                 if item is self._DONE:
                     return
                 if self._err is None:
-                    self._fn(item)
+                    with self._span(item):
+                        self._fn(item)
             except BaseException as e:  # surfaced on flush/close
                 self._err = e
             finally:
@@ -217,6 +224,13 @@ class BlockWriteback(AsyncStage):
             lambda item: sink(item[0], np.asarray(item[1])),
             depth=depth, name="BlockWriteback",
         )
+
+    def _span(self, item):
+        # the materialize inside this span waits on the device sweep,
+        # so on the trace it is the visible proxy for device-side work
+        # overlapping the driver's dispatch track.
+        return obs.tracer().span("writeback", cat="pipeline",
+                                 block=item[0])
 
     def submit(self, index: int, device_array):  # type: ignore[override]
         super().submit((index, device_array))
@@ -284,7 +298,8 @@ class BlockPrefetcher:
             finally:
                 put(self._DONE)
 
-        self._threads = [threading.Thread(target=worker, daemon=True)]
+        self._threads = [threading.Thread(
+            target=worker, daemon=True, name="BlockPrefetcher.stage")]
         self._threads[0].start()
 
     def _init_piped(self, items, stage, depth, pre, drop):
@@ -333,8 +348,12 @@ class BlockPrefetcher:
                     if drop is not None:
                         drop(item)
 
-        self._threads = [threading.Thread(target=reader, daemon=True),
-                         threading.Thread(target=stager, daemon=True)]
+        self._threads = [
+            threading.Thread(target=reader, daemon=True,
+                             name="BlockPrefetcher.pre"),
+            threading.Thread(target=stager, daemon=True,
+                             name="BlockPrefetcher.stage"),
+        ]
         for t in self._threads:
             t.start()
 

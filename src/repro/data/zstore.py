@@ -58,6 +58,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro import obs
+
 # Content stamps are process-global monotone counters so that two slab
 # stores (e.g. two chains driven by one StreamingHDP in tests) can save
 # into the same checkpoint directory without stamp collisions: a
@@ -277,6 +279,10 @@ class ZSlabStore:
         self.block_shape = tuple(int(x) for x in block_shape)
         self.dtype = np.dtype(dtype)
         self.bytes_written = 0
+        # bytes moved by actual storage I/O on the hot read path: the
+        # RAM backend hands out views (no I/O, stays 0), the disk
+        # backend counts every slab file it loads for staging.
+        self.bytes_read = 0
         self.stamps = np.zeros(num_blocks, np.int64)
         self._res_lock = threading.Lock()
         self._resident: dict[int, int] = {}
@@ -457,8 +463,11 @@ class DiskZStore(ZSlabStore):
         self._checkout(b)
         # packed stores keep packed files AND hand out packed slabs: the
         # disk read and the H2D copy both move dtype-sized bytes.
-        return self._zbs.load_block(b, int(self._zbs.versions[b]),
-                                    self.block_shape, self.dtype)
+        with obs.tracer().span("zstore_read", cat="zstore", block=b):
+            arr = self._zbs.load_block(b, int(self._zbs.versions[b]),
+                                       self.block_shape, self.dtype)
+        self.bytes_read += arr.nbytes
+        return arr
 
     def release(self, b: int):
         self._checkin(b)
@@ -469,7 +478,8 @@ class DiskZStore(ZSlabStore):
             old = int(self._zbs.versions[b])
             self.touch(b)
             packed = self._packed(arr)
-            self._zbs.write_block(b, packed, int(self.stamps[b]))
+            with obs.tracer().span("zstore_write", cat="zstore", block=b):
+                self._zbs.write_block(b, packed, int(self.stamps[b]))
             self.bytes_written += packed.nbytes
             if old >= 0 and (b, old) not in self._pinned:
                 self._zbs.delete(b, old)

@@ -1,0 +1,150 @@
+"""Tail and summarize a metrics JSONL file (the --metrics output).
+
+Reads the snapshot stream written by ``repro.obs.MetricsLogger`` (one
+JSON object per line, schema documented in repro/obs/metrics.py) and
+renders the latest state: gauges at their last value, counters with a
+rate derived from the two most recent snapshots, histograms with count
+and estimated p50/p95 from their bucket counts. With ``--follow`` it
+keeps watching the file and re-renders whenever new lines land — a
+poor man's dashboard for a run on the other side of an ssh session.
+
+  PYTHONPATH=src python -m repro.launch.monitor /tmp/metrics.jsonl
+  PYTHONPATH=src python -m repro.launch.monitor /tmp/metrics.jsonl --follow
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional
+
+
+def read_snapshots(path: str) -> list[dict]:
+    """Every parseable snapshot line (a truncated final line — a flush
+    racing the reader — is skipped, not fatal)."""
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+    except FileNotFoundError:
+        pass
+    return out
+
+
+def _label_str(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def _hist_pct(le: list, counts: list, q: float) -> Optional[float]:
+    """Linear-interpolated percentile estimate from cumulative bucket
+    counts (mirrors repro.obs.metrics.Histogram.percentile)."""
+    total = sum(counts)
+    if total == 0:
+        return None
+    rank = q / 100.0 * total
+    seen = 0.0
+    for i, c in enumerate(counts):
+        if seen + c >= rank and c > 0:
+            lo = 0.0 if i == 0 else le[i - 1]
+            hi = le[i] if i < len(le) else lo * 2 or 1.0
+            return lo + (rank - seen) / c * (hi - lo)
+        seen += c
+    return le[-1] if le else None
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v != 0 and abs(v) < 0.01:  # don't crush tiny fractions to 0.00
+            return f"{v:.3g}"
+        return f"{v:,.2f}"
+    return f"{v:,}"
+
+
+def render(snaps: list[dict], out=sys.stdout):
+    """Render the newest snapshot (counter rates against the previous
+    one when available)."""
+    if not snaps:
+        print("no snapshots yet", file=out)
+        return
+    cur = snaps[-1]
+    prev = snaps[-2] if len(snaps) > 1 else None
+    dt = cur["ts"] - prev["ts"] if prev is not None else None
+    prev_vals = {}
+    if prev is not None:
+        for m in prev.get("metrics", []):
+            key = (m["name"], _label_str(m.get("labels", {})))
+            prev_vals[key] = m.get("value")
+    age = time.time() - cur["ts"]
+    print(f"snapshot #{len(snaps)} ts={cur['ts']:.0f} "
+          f"({age:.1f}s ago)", file=out)
+    rows = []
+    for m in sorted(cur.get("metrics", []),
+                    key=lambda m: (m["type"], m["name"])):
+        name = m["name"] + _label_str(m.get("labels", {}))
+        if m["type"] == "counter":
+            extra = ""
+            key = (m["name"], _label_str(m.get("labels", {})))
+            if dt and key in prev_vals and prev_vals[key] is not None:
+                rate = (m["value"] - prev_vals[key]) / dt
+                extra = f"  ({rate:,.2f}/s)"
+            rows.append(("counter", name, _fmt(m["value"]) + extra))
+        elif m["type"] == "gauge":
+            rows.append(("gauge", name, _fmt(m["value"])))
+        else:  # histogram
+            p50 = _hist_pct(m["le"], m["bucket_counts"], 50)
+            p95 = _hist_pct(m["le"], m["bucket_counts"], 95)
+            rows.append(("histogram", name,
+                         f"n={m['count']:,}  p50={_fmt(p50)}  "
+                         f"p95={_fmt(p95)}  sum={_fmt(m['sum'])}"))
+    if not rows:
+        print("  (empty registry)", file=out)
+        return
+    width = max(len(r[1]) for r in rows)
+    last_kind = None
+    for kind, name, val in rows:
+        if kind != last_kind:
+            print(f"-- {kind}s", file=out)
+            last_kind = kind
+        print(f"  {name:<{width}}  {val}", file=out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="summarize / tail a repro metrics JSONL file"
+    )
+    ap.add_argument("path", help="metrics JSONL file (--metrics output)")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep watching and re-render on new snapshots")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="poll cadence for --follow (seconds)")
+    args = ap.parse_args(argv)
+    seen = 0
+    while True:
+        snaps = read_snapshots(args.path)
+        if len(snaps) != seen:
+            seen = len(snaps)
+            render(snaps)
+        if not args.follow:
+            return 0 if snaps else 1
+        try:
+            time.sleep(args.interval)
+        except KeyboardInterrupt:
+            return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -127,7 +127,7 @@ def _serve_fleet(args, snap, docs):
         source, workers=args.workers, slots=args.slots, burnin=args.burnin,
         impl=args.impl, buckets=tuple(args.buckets),
         base_key=jax.random.key(args.seed), ensemble=args.ensemble,
-        watch_registry=args.watch_registry,
+        watch_registry=args.watch_registry, slo_ms=args.slo_ms,
     ) as fleet:
         rids = [fleet.submit(doc) for doc in docs]
         mixtures = fleet.run()
@@ -242,6 +242,16 @@ def main():
     ap.add_argument("--train-docs", type=int, default=64)
     ap.add_argument("--topics", type=int, default=16)
     ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace (Perfetto-loadable) of "
+                         "per-request serve spans to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append metrics-registry snapshots (JSONL) to "
+                         "PATH")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="end-to-end latency SLO threshold: classify "
+                         "completions into per-bucket ok/miss counters "
+                         "(fleet mode)")
     args = ap.parse_args()
     if args.smoke and not args.train_iters:
         args.train_iters = 20
@@ -252,7 +262,16 @@ def main():
                  "pass --workers N")
     if (args.watch_registry or args.ensemble > 1) and not args.registry:
         ap.error("--watch-registry/--ensemble need --registry")
-    serve(args)
+    if args.slo_ms is not None and not args.workers:
+        ap.error("--slo-ms is accounted by the fleet router: pass "
+                 "--workers N")
+    from repro import obs
+    obs.setup(trace=args.trace, metrics_path=args.metrics)
+    try:
+        serve(args)
+        obs.flush_metrics(force=True)
+    finally:
+        obs.finalize()
 
 
 if __name__ == "__main__":

@@ -255,11 +255,27 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--deadline", type=float, default=None)
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace (Perfetto-loadable) of "
+                         "the run's pipeline spans to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append metrics-registry snapshots (JSONL) to "
+                         "PATH; also enables per-iteration model-health "
+                         "gauges (K*, delta_n sparsity)")
+    ap.add_argument("--metrics-every", type=float, default=None,
+                    help="periodic metrics flush cadence in seconds "
+                         "(default: iteration boundaries only)")
     args = ap.parse_args()
-    if args.hdp:
-        train_hdp(args)
-    else:
-        train_lm(args)
+    from repro import obs
+    obs.setup(trace=args.trace, metrics_path=args.metrics,
+              metrics_every_s=args.metrics_every)
+    try:
+        if args.hdp:
+            train_hdp(args)
+        else:
+            train_lm(args)
+    finally:
+        obs.finalize()
 
 
 if __name__ == "__main__":

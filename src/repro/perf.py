@@ -1,13 +1,22 @@
 """Per-phase wall-time attribution for the streaming hot loop.
 
-``PhaseTimers`` is a tiny accumulator of named monotonic time spans:
-the profiled iteration (``StreamingHDP.iteration_profiled``) wraps each
-pipeline phase — table build, corpus read, z-slab read, H2D staging,
-sweep, delta merge, D2H write-back, iteration tail — in
-``timers.phase(name)`` with explicit device syncs at the boundaries, so
-the per-phase totals sum to (approximately) the serialized wall time
-and the roofline question "which phase actually dominates?" gets a
-measured answer instead of an assumed one (benchmarks/roofline_hdp.py).
+``PhaseTimers`` is a reducer over *spans*: ``phase(name)`` records one
+(name, start, duration) span per entry, forwarding it to the global
+span tracer (``repro.obs``) when tracing is enabled — so a ``--trace``
+roofline run shows the same phases on the timeline that the totals
+summarize — and ``totals``/``counts``/``fractions`` are reductions over
+the recorded span list. The profiled iteration
+(``StreamingHDP.iteration_profiled``) wraps each pipeline phase — table
+build, corpus read, z-slab read, H2D staging, sweep, delta merge, D2H
+write-back, iteration tail — in ``timers.phase(name)`` with explicit
+device syncs at the boundaries, so the per-phase totals sum to
+(approximately) the serialized wall time and the roofline question
+"which phase actually dominates?" gets a measured answer instead of an
+assumed one (benchmarks/roofline_hdp.py).
+
+Phases are strictly sequential by construction: nesting two phases
+would double-count the inner span in both totals, so ``phase`` raises
+on re-entrant entry instead of silently corrupting the attribution.
 
 All timing uses ``time.perf_counter`` (monotonic): wall-clock steps
 (NTP) can never corrupt a span.
@@ -17,40 +26,70 @@ from __future__ import annotations
 
 import time
 from contextlib import contextmanager
+from typing import Optional
+
+from repro import obs
 
 
 class PhaseTimers:
-    """Accumulates exclusive wall time per named phase.
+    """Accumulates exclusive wall time per named phase by reducing over
+    its recorded spans.
 
-    ``phase(name)`` is a re-entrant-free context manager; nesting two
-    phases would double-count, so the profiled loop keeps them strictly
-    sequential. ``summary()`` returns totals (seconds, rounded),
-    ``fractions()`` the share of the summed phase time.
+    ``phase(name)`` is a non-reentrant context manager (nesting
+    raises); ``spans`` holds every (name, start, duration) recorded.
+    ``summary()`` returns totals (seconds, rounded), ``fractions()``
+    the share of the summed phase time.
     """
 
     def __init__(self):
-        self.totals: dict[str, float] = {}
-        self.counts: dict[str, int] = {}
+        self.spans: list[tuple[str, float, float]] = []
+        self._active: Optional[str] = None
 
     @contextmanager
     def phase(self, name: str):
+        if self._active is not None:
+            raise RuntimeError(
+                f"phase {name!r} entered while phase {self._active!r} is "
+                "still open: nested phases would double-count — keep "
+                "phases strictly sequential"
+            )
+        self._active = name
         t0 = time.perf_counter()
         try:
             yield
         finally:
             dt = time.perf_counter() - t0
-            self.totals[name] = self.totals.get(name, 0.0) + dt
-            self.counts[name] = self.counts.get(name, 0) + 1
+            self._active = None
+            self.spans.append((name, t0, dt))
+            tr = obs.tracer()
+            if tr.enabled:
+                tr._emit_complete(name, "phase", t0, dt, None)
+
+    # -- reductions over the span list ------------------------------------
+    @property
+    def totals(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for name, _, dt in self.spans:
+            out[name] = out.get(name, 0.0) + dt
+        return out
+
+    @property
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for name, _, _ in self.spans:
+            out[name] = out.get(name, 0) + 1
+        return out
 
     @property
     def total(self) -> float:
-        return sum(self.totals.values())
+        return sum(dt for _, _, dt in self.spans)
 
     def summary(self, ndigits: int = 4) -> dict[str, float]:
         return {k: round(v, ndigits) for k, v in self.totals.items()}
 
     def fractions(self, ndigits: int = 3) -> dict[str, float]:
-        tot = self.total
+        totals = self.totals
+        tot = sum(totals.values())
         if tot <= 0:
-            return {k: 0.0 for k in self.totals}
-        return {k: round(v / tot, ndigits) for k, v in self.totals.items()}
+            return {k: 0.0 for k in totals}
+        return {k: round(v / tot, ndigits) for k, v in totals.items()}

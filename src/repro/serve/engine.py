@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import conformance as C
 from repro.data.stream import AsyncStage
 from repro.serve import foldin as F
@@ -126,6 +127,7 @@ class _Pending:
     # becomes visible to ``_admit``.
     row_tokens: Optional[np.ndarray] = None
     row_mask: Optional[np.ndarray] = None
+    admit_t: Optional[float] = None   # set at slot bind
 
 
 @dataclass
@@ -134,7 +136,21 @@ class EngineStats:
     steps: int = 0
     wall_s: float = 0.0
     latencies_s: list = field(default_factory=list)
+    latencies_dropped: int = 0  # oldest samples evicted by the window cap
     shapes: set = field(default_factory=set)
+
+    # Keep the raw-sample buffer bounded on a long-lived engine: evict the
+    # oldest half past the cap, COUNTING what was evicted so summary()
+    # can label its percentiles as computed over a recent window rather
+    # than silently presenting them as all-time.
+    _LAT_CAP = 65536
+
+    def record_latency(self, dt_s: float):
+        self.latencies_s.append(dt_s)
+        if len(self.latencies_s) > self._LAT_CAP:
+            drop = self._LAT_CAP // 2
+            del self.latencies_s[:drop]
+            self.latencies_dropped += drop
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_s) * 1e3
@@ -146,6 +162,10 @@ class EngineStats:
             if len(lat) else None,
             "p95_latency_ms": round(float(np.percentile(lat, 95)), 2)
             if len(lat) else None,
+            # percentiles above cover the most recent `latency_window`
+            # completions; `latencies_dropped` counts evicted samples.
+            "latency_window": len(lat),
+            "latencies_dropped": self.latencies_dropped,
             "compiled_shapes": sorted(self.shapes),
         }
 
@@ -163,6 +183,7 @@ class ServeEngine:
         self, snap: ModelSnapshot, *, slots: int = 8, burnin: int = 16,
         impl: str = "sparse", buckets: Sequence[int] = DEFAULT_BUCKETS,
         base_key: Optional[jax.Array] = None, async_admit: bool = False,
+        trace_tag: str = "",
     ):
         if slots <= 0:
             raise ValueError("slots must be positive")
@@ -184,6 +205,11 @@ class ServeEngine:
         self._completed: dict[int, np.ndarray] = {}  # drained by run()
         self._next_rid = 0
         self.stats = EngineStats()
+        # distinguishes this engine's async trace ids (and metric labels)
+        # when several engines share a process — a fleet tags each with
+        # "w{worker}.v{version}" so ensemble fan-out of one rid to many
+        # versions cannot collide in the (cat, id) async-event keyspace.
+        self.trace_tag = trace_tag
         # per-engine jit instances (not module-level): fleet workers on
         # different devices would otherwise alternate one shared
         # function's most-recent-call fast path and pay the python
@@ -237,9 +263,13 @@ class ServeEngine:
         if rid in self._reqs:
             raise ValueError(f"seed/request id {rid} already in flight")
         self._next_rid = max(self._next_rid, rid) + 1
-        p = _Pending(rid=rid, tokens=tokens, submit_t=time.monotonic())
+        p = _Pending(rid=rid, tokens=tokens, submit_t=time.perf_counter())
         self._reqs[rid] = p
         bucket = self._bucket(tokens.size)
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.async_begin("request.queued", self._aid(rid), cat="serve",
+                           bucket=bucket, tag=self.trace_tag)
         if self._packer is not None:
             self._packer.submit((p, bucket))  # packs + enqueues off-thread
         else:
@@ -247,10 +277,16 @@ class ServeEngine:
             self._queue[bucket].append(p)
         return rid
 
+    def _aid(self, rid: int) -> str:
+        """Async trace-event id for one request (unique per engine)."""
+        return f"{self.trace_tag}:{rid}" if self.trace_tag else str(rid)
+
     # -- slot admission / retirement --------------------------------------
     def _admit(self, pool: _Slots, bucket: int):
         q = self._queue[bucket]
         admitted = False
+        tr = obs.tracer()
+        hist = obs.metrics().histogram("serve.queue_wait_ms", bucket=bucket)
         for s in range(self.slots):
             if pool.req[s] is not None or not q:
                 continue
@@ -264,6 +300,13 @@ class ServeEngine:
             pool.sweeps[s] = 0
             pool.req[s] = p.rid
             p.row_tokens = p.row_mask = None
+            p.admit_t = time.perf_counter()
+            hist.observe((p.admit_t - p.submit_t) * 1e3)
+            if tr.enabled:
+                aid = self._aid(p.rid)
+                tr.async_end("request.queued", aid, cat="serve")
+                tr.async_begin("request.inflight", aid, cat="serve",
+                               bucket=bucket, slot=s, tag=self.trace_tag)
             admitted = True
         if admitted:
             pool.mark_dirty()
@@ -278,16 +321,21 @@ class ServeEngine:
         theta = np.asarray(self._theta_fn(
             pool.m, self.snap.psi, self.snap.alpha,
         ))
-        now = time.monotonic()
+        now = time.perf_counter()
+        tr = obs.tracer()
+        hist = obs.metrics().histogram("serve.service_ms", bucket=pool.length)
         for s in done:
             # evict the request entirely: a long-lived engine must not
             # accumulate per-request state (tokens, theta) forever.
             p = self._reqs.pop(pool.req[s])
             self._completed[p.rid] = theta[s]
             self.stats.completed += 1
-            self.stats.latencies_s.append(now - p.submit_t)
-            if len(self.stats.latencies_s) > 65536:
-                del self.stats.latencies_s[:32768]
+            self.stats.record_latency(now - p.submit_t)
+            if p.admit_t is not None:
+                hist.observe((now - p.admit_t) * 1e3)
+            if tr.enabled:
+                tr.async_end("request.inflight", self._aid(p.rid),
+                             cat="serve")
             pool.req[s] = None
             pool.mask[s] = False
         # host masks changed (freed rows go inert); the device twin is
@@ -313,12 +361,14 @@ class ServeEngine:
             busy = True
             has_fresh = any(r is not None and pool.sweeps[s] == 0
                             for s, r in enumerate(pool.req))
-            d_tokens, d_mask, d_seeds = pool.device_batch()
-            pool.z, pool.m = self._step_fn(
-                self.snap, d_tokens, d_mask, pool.z, d_seeds,
-                jnp.asarray(pool.sweeps), self.base_key, impl=self.impl,
-                has_fresh=has_fresh,
-            )
+            with obs.tracer().span("engine_step", cat="serve",
+                                   bucket=bucket, tag=self.trace_tag):
+                d_tokens, d_mask, d_seeds = pool.device_batch()
+                pool.z, pool.m = self._step_fn(
+                    self.snap, d_tokens, d_mask, pool.z, d_seeds,
+                    jnp.asarray(pool.sweeps), self.base_key, impl=self.impl,
+                    has_fresh=has_fresh,
+                )
             live = np.array([r is not None for r in pool.req])
             pool.sweeps[live] += 1
             pool.steps += 1
@@ -353,8 +403,8 @@ class ServeEngine:
         per-request state after handing a mixture back)."""
         if self._packer is not None:
             self._packer.flush()  # everything submitted is admissible
-        t0 = time.monotonic()
+        t0 = time.perf_counter()
         while self.step():
             pass
-        self.stats.wall_s += time.monotonic() - t0
+        self.stats.wall_s += time.perf_counter() - t0
         return self.drain_completed()

@@ -81,6 +81,7 @@ class _Worker(threading.Thread):
                 buckets=f.buckets,
                 base_key=jax.device_put(f.base_key, self.device),
                 async_admit=True,
+                trace_tag=f"w{self.wid}.v{version}",
             )
             self.engines[version] = eng
         return eng
@@ -170,6 +171,10 @@ class ServeFleet:
     hot-swaps on publish; with ``ensemble=E`` fans every request out to
     the E newest versions and averages).
 
+    ``slo_ms`` turns on SLO accounting in the router: per-bucket
+    ok/miss counters against the end-to-end latency threshold, surfaced
+    by ``stats_summary`` and the global metrics registry.
+
     ``submit``/``run`` mirror ``ServeEngine``: submit enqueues (blocking
     on backpressure beyond ``max_pending`` queued subtasks), ``run``
     blocks until everything submitted has completed and hands back
@@ -191,6 +196,7 @@ class ServeFleet:
         watch_registry: bool = False,
         max_pending: int = 1024,
         poll_registry_s: float = 0.05,
+        slo_ms: Optional[float] = None,
     ):
         if workers is None:
             workers = len(jax.devices())
@@ -224,7 +230,7 @@ class ServeFleet:
         self.watch = watch_registry
         self.poll_registry_s = poll_registry_s
         self.router = AdmissionRouter(
-            buckets=self.buckets, max_pending=max_pending
+            buckets=self.buckets, max_pending=max_pending, slo_ms=slo_ms
         )
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -263,7 +269,7 @@ class ServeFleet:
         engine steps when ``watch_registry`` is on)."""
         if not self.watch:
             return
-        now = time.monotonic()
+        now = time.perf_counter()
         with self._lock:
             if now - self._last_poll < self.poll_registry_s:
                 return
@@ -299,7 +305,7 @@ class ServeFleet:
             rid = self._next_rid if seed is None else seed
             self._next_rid = max(self._next_rid, rid) + 1
             if self._t0 is None:
-                self._t0 = time.monotonic()
+                self._t0 = time.perf_counter()
         self.router.submit(rid, tokens, versions=versions, timeout=timeout)
         with self._lock:
             self._submitted += 1
@@ -308,22 +314,22 @@ class ServeFleet:
     def run(self, timeout: Optional[float] = None) -> dict[int, np.ndarray]:
         """Block until every submitted request has completed; returns
         {rid: mixture}, drained. Worker failures surface here."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else time.perf_counter() + timeout
         while True:
             self._raise_worker_errors()
             step = (None if deadline is None
-                    else max(deadline - time.monotonic(), 0.0))
+                    else max(deadline - time.perf_counter(), 0.0))
             try:
                 out = self.router.drain(
                     timeout=0.5 if step is None else min(step, 0.5)
                 )
                 break
             except TimeoutError:
-                if deadline is not None and time.monotonic() >= deadline:
+                if deadline is not None and time.perf_counter() >= deadline:
                     raise
         with self._lock:
             if self._t0 is not None:
-                self._wall_s += time.monotonic() - self._t0
+                self._wall_s += time.perf_counter() - self._t0
                 self._t0 = None
         return out
 
@@ -342,7 +348,7 @@ class ServeFleet:
         # counts ONCE here; per-worker counters count engine subtasks.
         completed = self.router.completed_total()
         wall = self._wall_s + (
-            time.monotonic() - self._t0 if self._t0 is not None else 0.0
+            time.perf_counter() - self._t0 if self._t0 is not None else 0.0
         )
         return {
             "workers": len(self.workers),

@@ -34,6 +34,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclass
 class Task:
@@ -59,13 +61,26 @@ class _Outstanding:
 
 
 class AdmissionRouter:
-    """Bounded shared admission queue + result aggregation."""
+    """Bounded shared admission queue + result aggregation.
 
-    def __init__(self, *, buckets: Sequence[int], max_pending: int = 1024):
+    ``slo_ms`` (optional) turns on SLO accounting: every completed
+    request's end-to-end latency is classified against the threshold
+    into per-bucket ``serve.slo_ok`` / ``serve.slo_miss`` counters (in
+    the global metrics registry AND router-local tallies, so
+    ``latency_summary`` works even if the registry is reset).
+    """
+
+    _LAT_CAP = 65536  # raw end-to-end latency sample window
+
+    def __init__(self, *, buckets: Sequence[int], max_pending: int = 1024,
+                 slo_ms: Optional[float] = None):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
+        if slo_ms is not None and slo_ms <= 0:
+            raise ValueError(f"slo_ms must be positive, got {slo_ms}")
         self.buckets = tuple(sorted(buckets))
         self.max_pending = max_pending
+        self.slo_ms = slo_ms
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)   # workers wait here
         self._space = threading.Condition(self._lock)  # submitters wait here
@@ -76,7 +91,13 @@ class AdmissionRouter:
         self._completed: dict[int, np.ndarray] = {}
         self._completed_total = 0  # requests ever completed (not drained)
         self._latencies: list[float] = []
+        self._latencies_dropped = 0
+        self._slo_ok = 0
+        self._slo_miss = 0
         self._closed = False
+
+    def _depth_gauge(self, bucket: int):
+        return obs.metrics().gauge("serve.queue_depth", bucket=bucket)
 
     # -- admission ---------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -100,7 +121,7 @@ class AdmissionRouter:
             raise ValueError(f"duplicate ensemble versions {vset}")
         n_sub = max(len(vset), 1)
         bucket = self._bucket(tokens.size)
-        now = time.monotonic()
+        now = time.perf_counter()
         with self._lock:
             if rid in self._outstanding or rid in self._completed:
                 raise ValueError(f"request id {rid} already in flight")
@@ -109,7 +130,7 @@ class AdmissionRouter:
                 if self._closed:
                     raise RuntimeError("router is closed")
                 wait = (None if deadline is None
-                        else deadline - time.monotonic())
+                        else deadline - time.perf_counter())
                 if wait is not None and wait <= 0:
                     raise TimeoutError(
                         f"router backpressure: {self._queued} subtasks "
@@ -127,7 +148,12 @@ class AdmissionRouter:
                     submit_t=now,
                 ))
                 self._queued += 1
+            self._depth_gauge(bucket).set(len(self._queues[bucket]))
             self._work.notify_all()
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.async_begin("request", rid, cat="router", bucket=bucket,
+                           subtasks=n_sub)
         return rid
 
     # -- dispatch ----------------------------------------------------------
@@ -159,6 +185,7 @@ class AdmissionRouter:
                 out.append(q.popleft())
             self._queued -= len(out)
             if out:
+                self._depth_gauge(bucket).set(len(q))
                 self._space.notify_all()
             return out
 
@@ -182,18 +209,35 @@ class AdmissionRouter:
             del self._outstanding[task.rid]
             self._completed[task.rid] = theta
             self._completed_total += 1
-            self._latencies.append(time.monotonic() - o.submit_t)
-            if len(self._latencies) > 65536:
-                del self._latencies[:32768]
+            lat_s = time.perf_counter() - o.submit_t
+            self._latencies.append(lat_s)
+            if len(self._latencies) > self._LAT_CAP:
+                drop = self._LAT_CAP // 2
+                del self._latencies[:drop]
+                self._latencies_dropped += drop
+            lat_ms = lat_s * 1e3
+            M = obs.metrics()
+            M.histogram("serve.latency_ms",
+                        bucket=task.bucket).observe(lat_ms)
+            if self.slo_ms is not None:
+                if lat_ms <= self.slo_ms:
+                    self._slo_ok += 1
+                    M.counter("serve.slo_ok", bucket=task.bucket).inc()
+                else:
+                    self._slo_miss += 1
+                    M.counter("serve.slo_miss", bucket=task.bucket).inc()
+            tr = obs.tracer()
+            if tr.enabled:
+                tr.async_end("request", task.rid, cat="router")
             self._done.notify_all()
 
     def drain(self, timeout: Optional[float] = None) -> dict:
         """Block until nothing is queued or outstanding; hand back (and
         forget) every completed {rid: mixture} since the last drain."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else time.perf_counter() + timeout
         with self._lock:
             while self._outstanding or self._queued:
-                wait = None if deadline is None else deadline - time.monotonic()
+                wait = None if deadline is None else deadline - time.perf_counter()
                 if wait is not None and wait <= 0:
                     raise TimeoutError(
                         f"drain timed out with {len(self._outstanding)} "
@@ -230,13 +274,25 @@ class AdmissionRouter:
         whose completions include compile time)."""
         with self._lock:
             self._latencies.clear()
+            self._latencies_dropped = 0
+            self._slo_ok = 0
+            self._slo_miss = 0
 
     def latency_summary(self) -> dict:
         with self._lock:
             lat = np.asarray(self._latencies) * 1e3
-        return {
+            dropped = self._latencies_dropped
+            slo_ok, slo_miss = self._slo_ok, self._slo_miss
+        out = {
             "p50_latency_ms": round(float(np.percentile(lat, 50)), 2)
             if len(lat) else None,
             "p95_latency_ms": round(float(np.percentile(lat, 95)), 2)
             if len(lat) else None,
+            # percentiles cover the most recent `latency_window` samples
+            "latency_window": int(len(lat)),
+            "latencies_dropped": dropped,
         }
+        if self.slo_ms is not None:
+            out.update(slo_ms=self.slo_ms, slo_ok=slo_ok,
+                       slo_miss=slo_miss)
+        return out
