@@ -1,14 +1,20 @@
-"""Warn-only bench regression gate for the committed BENCH_hdp.json.
+"""Bench regression gate for the committed BENCH_hdp.json.
 
 Compares a fresh ``perf_hdp --stream`` / ``--serve`` / ``--serve-fleet``
 artifact against the committed baseline, record by record (matched on
-mode / impl / block geometry / workers / slots), and flags throughput
-regressions beyond ``--threshold`` (default 20%) — ``tokens_per_s`` for
-streaming records, ``docs_per_s`` for serving records.
+mode / impl / block geometry / workers / slots), in two tiers:
 
-Warn-only by design: CI runners have noisy, heterogeneous CPUs, so a
-hard gate would flake — the step prints GitHub-annotation warnings and
-always exits 0 unless ``--strict`` is passed.
+* **Gating** (exit 1): the deterministic byte-volume keys —
+  ``writeback_mb_per_iter`` and ``zstore_read_mb_per_iter``. These are
+  exact functions of block geometry, z dtype and iteration count, not
+  of machine speed, so any drift beyond rounding is a real pipeline
+  change (e.g. packed slabs silently widening) and fails the check on
+  every runner.
+* **Warn-only**: the throughput keys — ``tokens_per_s`` for streaming
+  records, ``docs_per_s`` for serving records — beyond ``--threshold``
+  (default 20%). CI runners have noisy, heterogeneous CPUs, so a hard
+  throughput gate would flake; the step prints GitHub-annotation
+  warnings and exits 0 unless ``--strict`` is passed.
 
   PYTHONPATH=src python -m benchmarks.check_bench \
       --fresh BENCH_hdp_stream.json --baseline BENCH_hdp.json
@@ -17,6 +23,10 @@ always exits 0 unless ``--strict`` is passed.
 import argparse
 import json
 import sys
+
+# deterministic per-record byte-volume keys: exact machine-independent
+# functions of the pipeline's data movement. Gated hard (see docstring).
+BYTE_KEYS = ("writeback_mb_per_iter", "zstore_read_mb_per_iter")
 
 
 def _key(rec):
@@ -53,6 +63,7 @@ def compare(fresh, baseline, threshold):
     base_by_key = {_key(r): r for r in baseline if _metric(r)[0]}
     fresh_keys = set()
     regressions = []
+    byte_drifts = []
     for rec in fresh:
         name, val = _metric(rec)
         if name is None:
@@ -63,6 +74,16 @@ def compare(fresh, baseline, threshold):
             print(f"{_key(rec)}: no baseline record (new config?) — "
                   f"{val:,} {name}")
             continue
+        # deterministic byte volumes: gate hard, with a tolerance only
+        # for the artifact's own 3-decimal rounding.
+        for bk in BYTE_KEYS:
+            if bk not in rec or bk not in base:
+                continue
+            if abs(rec[bk] - base[bk]) > max(0.01 * abs(base[bk]), 0.002):
+                line = (f"{_key(rec)}: {bk} {rec[bk]} vs baseline "
+                        f"{base[bk]} — deterministic byte volume drifted")
+                byte_drifts.append(line)
+                print(f"::error title=byte-volume drift::{line}")
         ratio = val / max(base[name], 1e-9)
         line = (f"{_key(rec)}: {val:,.0f} {name} vs baseline "
                 f"{base[name]:,.0f} ({ratio:.2f}x)")
@@ -83,7 +104,7 @@ def compare(fresh, baseline, threshold):
             print(f"::warning title=baseline not re-measured::{key}: "
                   f"baseline has {val:,} {name} but the fresh artifact "
                   f"has no matching record")
-    return regressions
+    return regressions, byte_drifts
 
 
 def main():
@@ -99,15 +120,19 @@ def main():
         fresh = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    regressions = compare(fresh, baseline, args.threshold)
+    regressions, byte_drifts = compare(fresh, baseline, args.threshold)
     if regressions:
         print(f"{len(regressions)} regression(s) beyond "
               f"{args.threshold:.0%} (warn-only)" if not args.strict else
               f"{len(regressions)} regression(s) beyond {args.threshold:.0%}")
-        if args.strict:
-            sys.exit(1)
     else:
-        print("bench check: no regressions beyond threshold")
+        print("bench check: no throughput regressions beyond threshold")
+    if byte_drifts:
+        print(f"bench check: {len(byte_drifts)} deterministic byte-volume "
+              "drift(s) — gating failure")
+        sys.exit(1)
+    if regressions and args.strict:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -92,25 +92,37 @@ def stream_bench(args):
         # bucket must hold a document's active topics (min(K, L) —
         # enforced at sampler construction since the delta-stats PR).
         bucket = min(args.topics, 128)
+        if args.ppu_budget < 0:  # auto: corpus tokens always bound nnz(n)
+            budget = 1 << max(int(store.num_tokens) - 1, 1).bit_length()
+        else:
+            budget = args.ppu_budget or None
         cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
-                          z_impl=args.z_impl, hist_cap=128)
+                          z_impl=args.z_impl, hist_cap=128,
+                          ppu_nnz_budget=budget,
+                          alias_in_kernel=args.alias_in_kernel)
         stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
-                              z_store=args.z_store, z_pack=args.z_pack)
+                              z_store=args.z_store, z_pack=args.z_pack,
+                              block_sparse_tables=args.block_sparse_tables)
         state = stream.init_state(jax.random.key(0))
         state = stream.iteration(state)  # compile + warm cache
         _reset_peak_rss()  # per-config peak, not inherited highs
         bytes0 = state.z_blocks.bytes_written
+        rd0 = state.z_blocks.bytes_read
         t0 = time.perf_counter()
         for _ in range(args.iters):
             state = stream.iteration(state)
         dt = time.perf_counter() - t0
         wb_bytes = state.z_blocks.bytes_written - bytes0
+        rd_bytes = state.z_blocks.bytes_read - rd0
         rec = {
             "mode": "streaming", "z_impl": args.z_impl,
             "z_store": state.z_blocks.kind,
             "z_dtype": state.z_blocks.dtype.name,
             "block_docs": store.block_docs, "blocks": store.num_blocks,
             "tokens": store.num_tokens, "iters": args.iters,
+            "ppu_budget": budget or 0,
+            "alias_in_kernel": args.alias_in_kernel,
+            "block_sparse_tables": stream.block_sparse_tables,
             "sec_per_iter": round(dt / args.iters, 3),
             "sec_per_block": round(
                 dt / (args.iters * store.num_blocks), 4),
@@ -118,6 +130,8 @@ def stream_bench(args):
                 store.num_tokens * args.iters / dt, 1),
             "writeback_mb_per_iter": round(
                 wb_bytes / args.iters / 2 ** 20, 3),
+            "zstore_read_mb_per_iter": round(
+                rd_bytes / args.iters / 2 ** 20, 3),
             "peak_rss_mb": _peak_rss_mb(),
             "resident_z_slabs_hwm": int(state.z_blocks.high_water),
         }
@@ -125,8 +139,11 @@ def stream_bench(args):
             # one serialized, phase-attributed iteration (bitwise the
             # same chain; tokens_per_s above stays the overlapped number)
             state, timers = stream.iteration_profiled(state)
+            frac = timers.fractions()
             rec["phases_s"] = timers.summary()
-            rec["phase_frac"] = timers.fractions()
+            rec["phase_frac"] = frac
+            rec["tables_pct"] = round(sum(
+                v for k, v in frac.items() if k.startswith("tables")), 3)
         print(f"block_docs={store.block_docs} [{rec['z_store']}/"
               f"{rec['z_dtype']}]: {rec['tokens_per_s']:,} tok/s "
               f"({rec['sec_per_block']}s/block, "
@@ -272,8 +289,22 @@ def main():
                          "the packed-vs-int32 byte-volume baseline")
     ap.add_argument("--phases", action="store_true",
                     help="attach a per-phase breakdown (one serialized "
-                         "profiled iteration per record; tokens_per_s "
-                         "stays the overlapped measurement)")
+                         "profiled iteration per record, incl. the "
+                         "tables.h2d/build/gather split and tables_pct; "
+                         "tokens_per_s stays the overlapped measurement)")
+    ap.add_argument("--ppu-budget", type=int, default=-1,
+                    help="doubly-sparse budgeted PPU draw for --stream: "
+                         "-1 auto (corpus tokens — an always-valid "
+                         "nnz(n) bound), 0 dense draw, >0 explicit")
+    ap.add_argument("--alias-in-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="build term-(a) alias tables in the pallas "
+                         "kernel prologue instead of the epilogue-fused "
+                         "table build (pallas impl only)")
+    ap.add_argument("--block-sparse-tables", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="build alias tables only for vocab rows present "
+                         "in the corpus (auto: when coverage < 50%%)")
     ap.add_argument("--block-docs", type=int, nargs="+",
                     default=[64, 256, 1024])
     # serving-mode knobs (CPU-sized defaults so CI can run them)

@@ -3,10 +3,17 @@
 Answers "which phase actually dominates?" with measured wall time
 instead of assumptions: runs ``StreamingHDP.iteration_profiled`` — the
 serialized, phase-attributed, bitwise-identical twin of the overlapped
-``iteration()`` — and records per-phase seconds (tables / corpus_read /
-z_read / h2d / sweep / merge / writeback / tail) for each requested
-z-step impl. The optimization loop the paper's speedups came from
-(attack the measured top cost) starts here.
+``iteration()`` — and records per-phase seconds (tables.h2d /
+tables.build / tables.gather / corpus_read / z_read / h2d / sweep /
+merge / writeback / tail) for each requested z-step impl, plus
+``tables_pct`` (the summed tables.* share of serialized time — the
+number the tables-phase attack is judged by). The optimization loop the
+paper's speedups came from (attack the measured top cost) starts here.
+
+``--ppu-budget`` (-1 = auto: corpus tokens, a always-valid nnz bound;
+0 = dense draw) selects the doubly-sparse budgeted PPU;
+``--alias-in-kernel`` gates the kernel-prologue alias build;
+``--block-sparse-tables`` gates the vocab-masked table build.
 
   PYTHONPATH=src python -m benchmarks.roofline_hdp --out BENCH_roofline.json
   PYTHONPATH=src python -m benchmarks.roofline_hdp --z-impl sparse pallas
@@ -43,13 +50,20 @@ def roofline(args):
     store = ShardedCorpusStore.from_corpus(
         corpus, args.block_docs, doc_multiple=n_dev
     )
+    if args.ppu_budget < 0:  # auto: corpus tokens always bound nnz(n)
+        budget = 1 << max(int(store.num_tokens) - 1, 1).bit_length()
+    else:
+        budget = args.ppu_budget or None
     results = []
     for z_impl in args.z_impl:
         bucket = min(args.topics, args.max_len)
         cfg = H.HDPConfig(K=args.topics, V=v_pad, bucket=bucket,
-                          z_impl=z_impl, hist_cap=min(args.max_len, 128))
+                          z_impl=z_impl, hist_cap=min(args.max_len, 128),
+                          ppu_nnz_budget=budget,
+                          alias_in_kernel=args.alias_in_kernel)
         stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
-                              z_store=args.z_store, z_pack=args.z_pack)
+                              z_store=args.z_store, z_pack=args.z_pack,
+                              block_sparse_tables=args.block_sparse_tables)
         state = stream.init_state(jax.random.key(0))
         # warm-up compiles every jitted program so the measured phases
         # are steady-state, not trace+compile time.
@@ -61,6 +75,9 @@ def roofline(args):
             state, timers = stream.iteration_profiled(state, timers)
         wall = time.perf_counter() - t0
         wb_bytes = state.z_blocks.bytes_written - bytes0
+        frac = timers.fractions()
+        tables_pct = round(sum(
+            v for k, v in frac.items() if k.startswith("tables")), 3)
         rec = {
             "mode": "roofline", "z_impl": z_impl,
             "z_store": state.z_blocks.kind,
@@ -68,9 +85,13 @@ def roofline(args):
             "K": args.topics, "block_docs": store.block_docs,
             "blocks": store.num_blocks, "tokens": store.num_tokens,
             "iters": args.iters,
+            "ppu_budget": budget or 0,
+            "alias_in_kernel": args.alias_in_kernel,
+            "block_sparse_tables": stream.block_sparse_tables,
             "wall_s": round(wall, 3),
             "phases_s": timers.summary(),
-            "phase_frac": timers.fractions(),
+            "phase_frac": frac,
+            "tables_pct": tables_pct,
             "phases_total_s": round(timers.total, 3),
             "tokens_per_s_serialized": round(
                 store.num_tokens * args.iters / wall, 1),
@@ -98,6 +119,13 @@ def main():
     ap.add_argument("--z-impl", nargs="+", default=["sparse", "pallas"])
     ap.add_argument("--z-store", default=None, choices=["ram", "disk"])
     ap.add_argument("--z-pack", default=None, choices=["auto", "off"])
+    ap.add_argument("--ppu-budget", type=int, default=-1,
+                    help="-1: auto (corpus tokens), 0: dense draw, "
+                         ">0: explicit nnz budget")
+    ap.add_argument("--alias-in-kernel", default="auto",
+                    choices=["auto", "on", "off"])
+    ap.add_argument("--block-sparse-tables", default="auto",
+                    choices=["auto", "on", "off"])
     roofline(ap.parse_args())
 
 

@@ -6,28 +6,39 @@ rebuilt once per Gibbs iteration (Section 2.5).  Because Phi and Psi are
 *fixed* during the z-step under partial collapsing, the table is exact and
 no Metropolis-Hastings correction is required (unlike Li et al. 2014).
 
-Construction is a prefix-sum partition of the small/large entries
-(``_alias_build_row_psum``): after one ascending sort, the sequential
-Vose pairing is recovered in closed form from cumulative small deficits
-D and cumulative large surpluses U — small m's donor is the first large
-whose running surplus covers D[m-1], and large j demotes at the first
-small whose running deficit exceeds U[j] (``searchsorted`` both ways).
-Depth is O(log K) (sort + cumsum + binary search) instead of the K
-sequential ``lax.scan`` steps of the two-stack formulation, which had
-become the dominant fixed per-iteration cost at small K* (ROADMAP).
+Construction is a *sort-free* prefix-sum partition of the small/large
+entries (``_alias_build_row_flat``): the sequential Vose pairing is
+recovered in closed form from cumulative small deficits D and cumulative
+large surpluses U taken in **index order** — small i's donor is the
+first large whose running surplus covers D before i, and large j demotes
+at the first small whose running deficit exceeds U[j] (``searchsorted``
+both ways on rank-compacted lines). The pairing identity is order-free:
+whenever a large demotes, the deficit it absorbs from the next large
+re-synchronizes the consumed-surplus line with the original-smalls
+deficit line (conservation), so *any* fixed processing order yields a
+valid table — index order costs two cumsums and two binary searches
+where the previous revision also paid a full ascending ``argsort`` per
+row (the single most expensive op of the build on CPU/TPU alike).
 
-Bitwise note (conformance rationale): the prefix-sum build reproduces
-the *pairing structure* of the retired sequential scan exactly in exact
-arithmetic (the telescoping surplus/deficit identity), but computes the
-residual probabilities from cumulative sums rather than a chained
-left-to-right subtraction, so low-order float bits — and, at exact fp
-ties, the occasional pairing — may differ from tables built by older
-revisions. Every conformance surface in this repo is *relative*
-(dense/sparse/pallas z-steps against shared tables, streaming against
-monolithic, engine against direct fold-in) and is unaffected; there are
-no stored golden tables. The sequential scan is retained below as
-``_alias_build_row_scan`` — the reference the equivalence test in
-tests/test_alias.py checks the prefix-sum build against.
+``alias_build_row_onehot`` is the same pairing expressed with only
+comparisons, selects, one-hot reductions and cumulative sums — no sort,
+gather, scatter or ``searchsorted`` primitives — so it lowers inside a
+Pallas TPU kernel. It is the builder the hdp_z kernel prologue
+(``alias_in_kernel``) runs per token in VMEM, and it is bitwise-equal to
+``_alias_build_row_flat`` on the same backend: binary search on a
+nondecreasing line equals its comparison count, and one-hot gathers
+select values without arithmetic on them.
+
+Bitwise note (conformance rationale): the flat partition realizes a
+*different but equally valid* pairing than the retired value-sorted
+builds (kept below as ``_alias_build_row_psum`` / ``_alias_build_row_scan``
+oracles), so tables are NOT bitwise-identical across build generations —
+only the reconstructed pmfs agree to fp accuracy. Every conformance
+surface in this repo is *relative* (dense/sparse/pallas z-steps against
+shared tables, streaming against monolithic, engine against direct
+fold-in) and is unaffected; there are no stored golden tables.
+tests/test_alias.py pins flat-vs-sorted pmf equivalence and
+flat-vs-onehot bitwise equality.
 
 Sampling is deterministic given two uniforms: ``slot = floor(u1 * K)``,
 then ``select(u2 < prob[slot], slot, alias[slot])`` — two gathers and a
@@ -45,8 +56,16 @@ import numpy as np
 
 def _normalized(p: jax.Array) -> jax.Array:
     """q = p / mean(p): the alias construction's working scale, where
-    "small" entries sit below 1. Guard all-zero rows (e.g. padded vocab
-    entries): fall back to uniform."""
+    "small" entries sit below 1.
+
+    Guards: non-finite and negative weights are clamped to zero *before*
+    normalizing (a single Inf used to give total=inf and silently zero
+    the whole row with a NaN at the Inf entry — the resulting table
+    sampled garbage without tripping any error), and all-zero rows
+    (e.g. padded vocab entries, or rows that were entirely non-finite)
+    fall back to uniform. Kernel-safe: comparisons and selects only.
+    """
+    p = jnp.where(jnp.isfinite(p) & (p > 0), p, 0.0)
     total = jnp.sum(p)
     return jnp.where(
         total > 0, p / jnp.maximum(total, 1e-30) * p.shape[0],
@@ -54,9 +73,144 @@ def _normalized(p: jax.Array) -> jax.Array:
     )
 
 
-def _alias_build_row_psum(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+def _alias_build_row_flat(p: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Build one alias table from an unnormalized weight vector ``p`` (K,)
-    via a prefix-sum partition of the small/large entries.
+    via the sort-free, index-ordered prefix-sum partition.
+
+    Returns (prob, alias): prob[j] is the probability that slot j keeps
+    its own index, alias[j] the donor index otherwise.
+
+    Smalls (q < 1) are consumed in index order against larges consumed in
+    index order. With S/U the masked cumulative deficit/surplus lines:
+
+      * small i's donor is the first large (by index) whose cumulative
+        surplus covers S[i] - d[i] — found by ``searchsorted`` on the
+        rank-compacted surplus line (side='left', matching the retired
+        sorted build's convention);
+      * large j demotes at the first small whose cumulative deficit
+        strictly exceeds U[j] (side='right'), with residual prob
+        1 + U[j] - S[that small] and alias the next large by index;
+      * no demoting small => the large keeps prob 1; no covering large
+        (total deficit exceeding total surplus by fp residue) => the
+        small keeps its own slot.
+
+    Validity does not depend on processing order: when large j demotes,
+    the deficit it absorbs from large j+1 is exactly S[m*] - U[j], which
+    re-synchronizes the consumed-surplus line with the original-smalls
+    deficit line — the same telescoping identity the value-sorted build
+    relied on, holding for any fixed order. Dropping the per-row
+    ``argsort`` removes the most expensive op of the batched build.
+    """
+    k = p.shape[0]
+    q = _normalized(p)
+    pos = jnp.arange(k, dtype=jnp.int32)
+    small = q < 1.0
+    large = ~small
+    cs = jnp.cumsum(small.astype(jnp.int32))    # 1-based count of smalls
+    cl = jnp.cumsum(large.astype(jnp.int32))    # 1-based count of larges
+    ns = cs[-1]
+    nl = k - ns
+    rank_l = cl - 1
+
+    d = jnp.where(small, 1.0 - q, 0.0)
+    u = jnp.where(large, q - 1.0, 0.0)
+    dcum = jnp.cumsum(d)        # S: plateaus at larges
+    ucum = jnp.cumsum(u)        # U: plateaus at smalls
+
+    # Both monotone lines are searched at *full length*; the count of
+    # larges (resp. smalls) inside the located prefix converts a
+    # position on the padded line into a rank, and an integer search on
+    # the cumulative-count line converts a rank back into a position.
+    # All scatter-free: cumsum + searchsorted + gathers only.
+
+    # smalls: donor = first large whose running surplus covers D-before.
+    dprev = dcum - d
+    t1 = jnp.searchsorted(ucum, dprev, side="left").astype(jnp.int32)
+    r = jnp.where(t1 > 0, cl[jnp.maximum(t1 - 1, 0)], 0)   # donor rank
+    has_donor = small & (r < nl)
+    jstar = jnp.searchsorted(cl, r, side="right").astype(jnp.int32)
+    alias_small = jnp.where(has_donor, jnp.minimum(jstar, k - 1), pos)
+
+    # larges: demoting small = first with cumulative deficit > U[j].
+    t2 = jnp.searchsorted(dcum, ucum, side="right").astype(jnp.int32)
+    mstar = jnp.where(t2 > 0, cs[jnp.maximum(t2 - 1, 0)], 0)
+    demoted = large & (mstar < ns)
+    p2 = jnp.minimum(jnp.searchsorted(cs, mstar, side="right"), k - 1)
+    resid = 1.0 + ucum - dcum[p2]
+    has_next = demoted & (rank_l + 1 < nl)
+    next_l = jnp.minimum(
+        jnp.searchsorted(cl, rank_l + 1, side="right"), k - 1
+    ).astype(jnp.int32)
+
+    prob = jnp.where(small, q, jnp.where(demoted, resid, 1.0))
+    alias = jnp.where(small, alias_small, jnp.where(has_next, next_l, pos))
+    prob = jnp.clip(prob, 0.0, 1.0)
+    return prob.astype(jnp.float32), alias.astype(jnp.int32)
+
+
+def alias_build_row_onehot(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``_alias_build_row_flat`` re-expressed with Pallas-lowerable ops
+    only: comparisons, selects, cumulative sums and one-hot reductions —
+    no iota, sort, gather, scatter or ``searchsorted``.
+
+    This is the builder the hdp_z kernel prologue runs per token over
+    the word's W-wide support row, and the oracle side of the
+    ``alias_in_kernel`` conformance tests. Bitwise-equal to
+    ``_alias_build_row_flat`` on the same backend: a binary search on a
+    nondecreasing line returns exactly its comparison count, and one-hot
+    reductions (sum of one selected value and exact zeros) reproduce
+    gathers bit-for-bit. O(K^2) comparisons per row — intended for the
+    kernel's small W, not for the batched (V, K) build.
+    """
+    k = p.shape[0]
+    q = _normalized(p)
+    # iota-free positions: TPU Pallas rejects 1-D iota; cumsum lowers.
+    ones = jnp.ones((k,), jnp.int32)
+    pos = jnp.cumsum(ones) - 1
+    small = q < 1.0
+    large = ~small
+    ns = jnp.sum(small.astype(jnp.int32))
+    nl = k - ns
+
+    d = jnp.where(small, 1.0 - q, 0.0)
+    u = jnp.where(large, q - 1.0, 0.0)
+    dcum = jnp.cumsum(d)
+    ucum = jnp.cumsum(u)
+    rank_s = jnp.cumsum(small.astype(jnp.int32)) - 1
+    rank_l = jnp.cumsum(large.astype(jnp.int32)) - 1
+
+    # smalls: r = |{larges j : U[j] < dprev}| == searchsorted(side='left')
+    dprev = dcum - d
+    lt = large[None, :] & (ucum[None, :] < dprev[:, None])     # (k, k)
+    r = jnp.sum(lt.astype(jnp.int32), axis=1)
+    has_donor = small & (r < nl)
+    sel = (large[None, :] & (rank_l[None, :] == r[:, None])).astype(
+        jnp.int32)
+    alias_small = jnp.where(has_donor, jnp.sum(sel * pos[None, :], axis=1),
+                            pos)
+
+    # larges: mstar = |{smalls m : S[m] <= U[j]}| == side='right'
+    le = small[None, :] & (dcum[None, :] <= ucum[:, None])     # (k, k)
+    mstar = jnp.sum(le.astype(jnp.int32), axis=1)
+    demoted = large & (mstar < ns)
+    sel_m = (small[None, :] & (rank_s[None, :] == mstar[:, None])).astype(
+        jnp.float32)
+    s_at = jnp.sum(sel_m * dcum[None, :], axis=1)
+    resid = 1.0 + ucum - s_at
+    has_next = demoted & (rank_l + 1 < nl)
+    sel_n = (large[None, :] & (rank_l[None, :] == (rank_l + 1)[:, None])
+             ).astype(jnp.int32)
+    next_l = jnp.sum(sel_n * pos[None, :], axis=1)
+
+    prob = jnp.where(small, q, jnp.where(demoted, resid, 1.0))
+    alias = jnp.where(small, alias_small, jnp.where(has_next, next_l, pos))
+    prob = jnp.clip(prob, 0.0, 1.0)
+    return prob.astype(jnp.float32), alias.astype(jnp.int32)
+
+
+def _alias_build_row_psum(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Retired value-sorted prefix-sum partition build, kept as an oracle
+    for the sort-free ``_alias_build_row_flat`` (pmf equivalence tests).
 
     Returns (prob, alias): prob[j] is the probability that slot j keeps
     its own index, alias[j] the donor index otherwise.
@@ -217,11 +371,21 @@ def _alias_build_row_scan(p: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 @functools.partial(jax.jit)
 def alias_build(p: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Vectorized alias build (prefix-sum partition construction).
+    """Vectorized alias build (sort-free index-ordered partition).
 
     p: (..., K) unnormalized weights — one table per leading index.
     Returns (prob, alias) with the same leading shape.
     """
+    flat = p.reshape((-1, p.shape[-1]))
+    prob, alias = jax.vmap(_alias_build_row_flat)(flat)
+    return prob.reshape(p.shape), alias.reshape(p.shape)
+
+
+@functools.partial(jax.jit)
+def alias_build_sorted(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vectorized alias build via the retired value-sorted prefix-sum
+    partition — the oracle the sort-free production build is tested
+    against (pmf equivalence; pairings differ by construction)."""
     flat = p.reshape((-1, p.shape[-1]))
     prob, alias = jax.vmap(_alias_build_row_psum)(flat)
     return prob.reshape(p.shape), alias.reshape(p.shape)

@@ -55,7 +55,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.alias import alias_build, alias_sample
-from repro.core.polya_urn import ppu_sample, dirichlet_sample
+from repro.core.polya_urn import (
+    dirichlet_sample, ppu_sample, ppu_sample_budgeted)
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
 
 
@@ -72,6 +73,15 @@ class HDPConfig(NamedTuple):
     unroll_z: bool = False   # unroll the in-document sweep (cost probes)
     pallas_interpret: bool | None = None  # None: $REPRO_PALLAS_INTERPRET /
     #                          backend default (kernels/hdp_z/ops.py)
+    alias_in_kernel: str = "auto"  # pallas only: build term-(a) alias
+    #                          tables inside the z kernel (auto|on|off;
+    #                          auto = on for compiled TPU, off elsewhere)
+    ppu_nnz_budget: int | None = None  # doubly-sparse PPU Phi draw over
+    #                          at most this many non-zero n cells (must
+    #                          bound nnz(n); corpus token count always
+    #                          does). None = dense draw. Static: changing
+    #                          it retraces, and streaming-vs-monolithic
+    #                          bitwise equality needs equal budgets.
 
 
 class HDPState(NamedTuple):
@@ -343,7 +353,11 @@ def init_state(
     kp, kd = jax.random.split(key)
     z = jnp.zeros_like(tokens)
     n = count_n(z, tokens, mask, cfg.K, cfg.V)
-    phi, varphi = ppu_sample(kp, n, cfg.beta)
+    if cfg.ppu_nnz_budget is not None:
+        phi, varphi = ppu_sample_budgeted(
+            kp, n, cfg.beta, cfg.ppu_nnz_budget)
+    else:
+        phi, varphi = ppu_sample(kp, n, cfg.beta)
     psi = gem_prior_sample(kd, cfg.K, cfg.gamma)
     return HDPState(
         z=z, n=n, phi=phi, varphi=varphi, psi=psi,
@@ -375,6 +389,7 @@ def _z_step(cfg: HDPConfig, tokens, mask, z, phi, psi, uniforms):
         return zops.z_step_pallas(
             tokens, mask, z, phi, psi, cfg.alpha, uniforms, cfg.bucket,
             interpret=cfg.pallas_interpret, emit_delta=True,
+            alias_in_kernel=cfg.alias_in_kernel,
         )
     raise ValueError(f"unknown z_impl {cfg.z_impl!r}")
 
@@ -388,6 +403,9 @@ def gibbs_iteration(
     if cfg.exact_phi:
         phi = dirichlet_sample(k_phi, state.n, cfg.beta)
         varphi = state.varphi
+    elif cfg.ppu_nnz_budget is not None:
+        phi, varphi = ppu_sample_budgeted(
+            k_phi, state.n, cfg.beta, cfg.ppu_nnz_budget)
     else:
         phi, varphi = ppu_sample(k_phi, state.n, cfg.beta)
 

@@ -91,6 +91,17 @@ class ShardedHDP:
             )
         if cfg.z_impl not in ("dense", "sparse", "pallas"):
             raise ValueError(f"unknown z_impl {cfg.z_impl!r}")
+        # kernel-prologue alias build: resolved once (static for every
+        # jitted sub-step). Only meaningful for the pallas impl.
+        self.alias_in_kernel = False
+        if cfg.z_impl == "pallas":
+            from repro.kernels.hdp_z import ops as zops
+
+            self.alias_in_kernel = zops.resolve_alias_in_kernel(
+                cfg.alias_in_kernel,
+                interpret=zops.resolve_interpret(cfg.pallas_interpret),
+                compact=compact_tables,
+            )
 
     # -- sharding specs ---------------------------------------------------
     def specs(self) -> dict[str, P]:
@@ -127,22 +138,48 @@ class ShardedHDP:
     # -- mesh-local sub-steps ---------------------------------------------
     # Each of these runs INSIDE a shard_map region (collectives explicit).
 
-    def _phi_tables(self, n_shard, psi, k_phi):
+    def _ppu_shard(self, n_shard, k_phi, midx):
+        """Step 1: PPU draw on the local vocab shard (model-parallel).
+        Same key within a model column -> replicated over (pod, data).
+
+        With ``cfg.ppu_nnz_budget`` set, the draw is the doubly-sparse
+        budgeted decomposition (core/polya_urn.py): Poisson(beta)
+        background for every cell + Poisson(n) over a fixed-size gather
+        of non-zeros. Exact in distribution; a *different* stream than
+        the dense draw, so all bitwise chains keep budget=None.
+        """
+        cfg = self.cfg
+        kk = jax.random.fold_in(k_phi, midx)
+        if cfg.ppu_nnz_budget is not None:
+            from repro.core.polya_urn import ppu_counts_budgeted
+
+            return ppu_counts_budgeted(
+                kk, n_shard, cfg.beta, cfg.ppu_nnz_budget
+            )
+        return jax.random.poisson(
+            kk, n_shard.astype(jnp.float32) + cfg.beta, dtype=jnp.int32
+        )
+
+    def _phi_tables(self, n_shard, psi, k_phi, u_mask_shard=None, *,
+                    mask_cap=None):
         """Steps 1-3: PPU Phi-step on the vocab shard + z-step operand
         build/gather. Returns (phi_shard, varphi_shard, ztables) where
         ztables is the impl-specific tuple of replicated z-step operands.
+
+        ``u_mask_shard`` ((V/M,) bool, vocab-sharded) + ``mask_cap``
+        (static bound on flagged rows per shard) switch the table build
+        to block-sparse: alias tables are constructed only for flagged
+        vocab rows (bitwise-equal on those rows; a sweep touching only
+        flagged words is bitwise-unchanged). Ignored where it cannot
+        help: the dense impl (no tables), the kernel-prologue path (no
+        epilogue to shrink), and gather_tables=False.
         """
         cfg = self.cfg
         maxis = self.model_axis
         midx = jax.lax.axis_index(maxis)
 
         # 1. Phi-step: PPU on the local vocab shard (model-parallel).
-        #    Same key within a model column -> replicated over (pod, data).
-        varphi_shard = jax.random.poisson(
-            jax.random.fold_in(k_phi, midx),
-            n_shard.astype(jnp.float32) + cfg.beta,
-            dtype=jnp.int32,
-        )
+        varphi_shard = self._ppu_shard(n_shard, k_phi, midx)
         row_local = jnp.sum(varphi_shard, axis=1).astype(jnp.float32)
         row = jax.lax.psum(row_local, maxis)  # (K,)
         phi_shard = (
@@ -151,15 +188,35 @@ class ShardedHDP:
 
         # 2./3. Replicate the z-step operands.
         if cfg.z_impl == "pallas":
+            from repro.kernels.hdp_z import ops as zops
+
+            if self.alias_in_kernel:
+                # Kernel-prologue path: only the raw supports (vals,
+                # ids) are built and gathered — half the table wire
+                # bytes, no alias epilogue anywhere. The kernel
+                # rebuilds wa/q_a/alias rows in VMEM from apsi.
+                vals_s, ids_s = zops.build_word_sparse_supports(
+                    phi_shard.astype(jnp.float32), cfg.bucket
+                )
+                vals = jax.lax.all_gather(vals_s, maxis, axis=0, tiled=True)
+                ids = jax.lax.all_gather(ids_s, maxis, axis=0, tiled=True)
+                apsi = jnp.float32(cfg.alpha) * psi
+                return phi_shard, varphi_shard, (apsi, vals, ids)
+
             # Word-sparse tables built model-parallel on the vocab shard,
             # then gathered: (V, W) instead of the paper's (K, V) Phi
             # broadcast — a W/K communication saving (§Perf).
-            from repro.kernels.hdp_z import ops as zops
-
-            q_a_s, fpack_s, ipack_s = zops.build_word_sparse_tables(
-                phi_shard.astype(jnp.float32), psi, cfg.alpha, cfg.bucket,
-                compact=self.compact_tables,
-            )
+            if u_mask_shard is not None:
+                q_a_s, fpack_s, ipack_s = zops.build_word_sparse_tables_masked(
+                    phi_shard.astype(jnp.float32), psi, cfg.alpha,
+                    cfg.bucket, u_mask_shard, mask_cap,
+                    compact=self.compact_tables,
+                )
+            else:
+                q_a_s, fpack_s, ipack_s = zops.build_word_sparse_tables(
+                    phi_shard.astype(jnp.float32), psi, cfg.alpha,
+                    cfg.bucket, compact=self.compact_tables,
+                )
             q_a = jax.lax.all_gather(q_a_s, maxis, axis=0, tiled=True)
             fpack = jax.lax.all_gather(fpack_s, maxis, axis=0, tiled=True)
             ipack = jax.lax.all_gather(ipack_s, maxis, axis=0, tiled=True)
@@ -173,8 +230,23 @@ class ShardedHDP:
             return phi_shard, varphi_shard, (phi,)
         if self.gather_tables:
             wa = (phi_shard.astype(jnp.float32) * (cfg.alpha * psi)[:, None]).T
+            if u_mask_shard is not None:
+                # block-sparse: alias-partition only flagged rows (the
+                # expensive part); wa/q_a stay full-width (cheap VPU
+                # work). alias_build is row-independent, so flagged
+                # rows are bitwise the dense build.
+                (rows,) = jnp.nonzero(
+                    u_mask_shard, size=min(mask_cap, wa.shape[0]),
+                    fill_value=0,
+                )
+                p_sub, a_sub = alias_build(wa[rows])
+                prob_shard = jnp.zeros(wa.shape, jnp.float32).at[rows].set(
+                    p_sub)
+                alias_shard = jnp.zeros(wa.shape, jnp.int32).at[rows].set(
+                    a_sub)
+            else:
+                prob_shard, alias_shard = alias_build(wa)
             qa_shard = jnp.sum(wa, axis=1)
-            prob_shard, alias_shard = alias_build(wa)
             q_a = jax.lax.all_gather(qa_shard, maxis, axis=0, tiled=True)
             aprob = jax.lax.all_gather(prob_shard, maxis, axis=0, tiled=True)
             aalias = jax.lax.all_gather(alias_shard, maxis, axis=0, tiled=True)
@@ -205,11 +277,13 @@ class ShardedHDP:
         if cfg.z_impl == "pallas":
             from repro.kernels.hdp_z import ops as zops
 
+            # ztables is (q_a, fpack, ipack) — or, on the
+            # kernel-prologue path, (apsi, vals, ids) in the same slots.
             q_a, fpack, ipack = ztables
             return zops.hdp_z_pallas(
                 tokens, mask, z, u, q_a, fpack, ipack, kk=cfg.K,
                 interpret=zops.resolve_interpret(cfg.pallas_interpret),
-                emit_delta=True,
+                emit_delta=True, in_kernel=self.alias_in_kernel,
             )
         if cfg.z_impl == "dense":
             (phi,) = ztables
@@ -323,6 +397,35 @@ class ShardedHDP:
             self._phi_tables,
             mesh=self.mesh,
             in_specs=(s["n"], s["psi"], s["key"]),
+            out_specs=(s["phi"], s["varphi"], self._ztable_specs()),
+            check_vma=False,
+        )
+
+    def supports_masked_tables(self) -> bool:
+        """True when the block-sparse table build can change anything:
+        per-word alias tables exist (sparse w/ gather_tables, or pallas
+        with the epilogue build) — the dense impl has no tables and the
+        kernel-prologue path has no epilogue to shrink."""
+        cfg = self.cfg
+        if cfg.z_impl == "pallas":
+            return not self.alias_in_kernel
+        return cfg.z_impl == "sparse" and self.gather_tables
+
+    def phi_tables_masked_fn(self, cap: int):
+        """Block-sparse variant of ``phi_tables_fn``:
+        (n, psi, k_phi, u_mask) -> (phi, varphi, ztables), with u_mask a
+        (V,) bool of vocab rows to build tables for and ``cap`` a static
+        per-shard bound on flagged rows (the full flagged count always
+        works). Falls back to the dense build where masking cannot help
+        (``supports_masked_tables``)."""
+        if not self.supports_masked_tables():
+            fn = self.phi_tables_fn()
+            return lambda n, psi, k_phi, u_mask: fn(n, psi, k_phi)
+        s = self.specs()
+        return compat.shard_map(
+            functools.partial(self._phi_tables, mask_cap=cap),
+            mesh=self.mesh,
+            in_specs=(s["n"], s["psi"], s["key"], P(self.model_axis)),
             out_specs=(s["phi"], s["varphi"], self._ztable_specs()),
             check_vma=False,
         )

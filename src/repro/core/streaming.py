@@ -18,7 +18,17 @@ within each Gibbs iteration:
     ``REPRO_Z_STORE`` env var;
   * the Phi-step (PPU draw + z-step table build/gather) runs ONCE per
     iteration — valid because Phi and Psi are held fixed during the
-    z-step, making the block sweep embarrassingly parallel over blocks;
+    z-step, making the block sweep embarrassingly parallel over blocks.
+    It is *dispatched* before the prefetcher starts and awaited inside
+    the pipeline ("tables.build" span), so the build overlaps block 0's
+    corpus read / z read / H2D staging instead of serializing ahead of
+    them. With ``block_sparse_tables`` ("auto"|"on"|"off", or the
+    ``REPRO_BLOCK_SPARSE_TABLES`` env var) the alias tables are built
+    only for vocabulary rows actually present in the corpus
+    (``ShardedCorpusStore.vocab_ids``; "auto" enables this below 50%
+    vocab coverage), and with ``HDPConfig.alias_in_kernel`` the pallas
+    impl skips the table materialization entirely (the kernel-prologue
+    alias build — kernels/hdp_z/hdp_z.py);
   * per-block sufficient statistics merge as *deltas*: the z-sweep
     emits its per-document histogram m from the sweep carry and the
     block's exact integer delta to the topic-word statistic, so the hot
@@ -73,7 +83,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import hdp as H
-from repro.core.polya_urn import ppu_sample
+from repro.core.polya_urn import ppu_sample, ppu_sample_budgeted
 from repro.core.sharded import ShardedHDP
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
 from repro.data.stream import (BlockPrefetcher, BlockWriteback,
@@ -122,13 +132,29 @@ class StreamingHDP:
                  prefetch_depth: int = 2, writeback_depth: int = 2,
                  z_store: Union[str, None] = None,
                  z_dir: Optional[str] = None,
-                 z_pack: Union[str, None] = None):
+                 z_pack: Union[str, None] = None,
+                 block_sparse_tables: Union[str, None] = None):
         self.sh = sharded
         self.cfg = sharded.cfg
         self.store = store
         H.validate_bucket(self.cfg, store.max_len)
         self.prefetch_depth = prefetch_depth
         self.writeback_depth = writeback_depth
+        if block_sparse_tables is None:
+            block_sparse_tables = os.environ.get(
+                "REPRO_BLOCK_SPARSE_TABLES", "auto")
+        if block_sparse_tables not in ("auto", "on", "off"):
+            raise ValueError(
+                "block_sparse_tables must be 'auto', 'on' or 'off', got "
+                f"{block_sparse_tables!r}"
+            )
+        if (block_sparse_tables == "on"
+                and not sharded.supports_masked_tables()):
+            raise ValueError(
+                "block_sparse_tables='on' needs per-word alias tables "
+                "(sparse impl with gather_tables, or pallas without the "
+                "kernel-prologue build) — this configuration has none"
+            )
         if z_store is None:
             z_store = os.environ.get("REPRO_Z_STORE", "ram")
         if z_store not in ("ram", "disk"):
@@ -151,7 +177,33 @@ class StreamingHDP:
         self._z_sh, self._n_sh = ss.z, ss.n
         self._repl_sh = ss.psi
         self._ts, self._ms = ts, ms
-        self._phi_fn = jax.jit(sharded.phi_tables_fn())
+        # block-sparse tables: only for configs that have per-word alias
+        # tables, and (in "auto") only when the corpus leaves a real
+        # fraction of the vocabulary untouched — at >= 50% coverage the
+        # masked build's gather/scatter overhead buys nothing.
+        self._u_mask = None
+        enable_mask = (
+            sharded.supports_masked_tables()
+            and block_sparse_tables != "off"
+            and (block_sparse_tables == "on" or store.vocab_coverage < 0.5)
+        )
+        self.block_sparse_tables = enable_mask
+        if enable_mask:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            ids = store.vocab_ids()
+            u_mask = np.zeros((self.cfg.V,), bool)
+            u_mask[ids] = True
+            self._u_mask = jax.device_put(
+                jnp.asarray(u_mask),
+                NamedSharding(sharded.mesh,
+                              PartitionSpec(sharded.model_axis)),
+            )
+            cap = max(int(ids.size), 1)
+            mfn = jax.jit(sharded.phi_tables_masked_fn(cap))
+            self._phi_fn = functools.partial(self._masked_phi, mfn)
+        else:
+            self._phi_fn = jax.jit(sharded.phi_tables_fn())
         self._z_fn = jax.jit(sharded.z_block_fn(), donate_argnums=(1,))
         # one jitted dispatch per block for the statistic merge (the
         # python-level `acc + c` pair it replaces was two uncompiled
@@ -180,6 +232,11 @@ class StreamingHDP:
         # foreign-dir checkpoint stores (save dirs that are NOT a disk
         # slab store's home); slab stores track their own dirty stamps.
         self._zstores: dict[str, ZBlockStore] = {}
+
+    def _masked_phi(self, mfn, n, psi, k_phi):
+        """Block-sparse table build: same (n, psi, k_phi) signature as
+        the dense ``phi_tables_fn`` so every call site is agnostic."""
+        return mfn(n, psi, k_phi, self._u_mask)
 
     def _make_slab_store(self) -> ZSlabStore:
         return make_zslab_store(
@@ -220,7 +277,14 @@ class StreamingHDP:
             n += np.asarray(count(jnp.asarray(blk.tokens),
                                   jnp.asarray(blk.mask)), np.int64)
         n = jnp.asarray(n.astype(np.int32))
-        phi, varphi = ppu_sample(kp, n, cfg.beta)
+        # mirror H.init_state's Phi draw exactly (incl. the budgeted
+        # doubly-sparse decomposition) so a streaming chain stays bitwise
+        # the monolithic one under every PPU mode.
+        if cfg.ppu_nnz_budget is not None:
+            phi, varphi = ppu_sample_budgeted(
+                kp, n, cfg.beta, cfg.ppu_nnz_budget)
+        else:
+            phi, varphi = ppu_sample(kp, n, cfg.beta)
         psi = gem_prior_sample(kd, cfg.K, cfg.gamma)
         # a fresh slab store starts as all-zeros content with every slab
         # save-dirty (the store constructor stamps them).
@@ -327,11 +391,19 @@ class StreamingHDP:
         health = obs.metrics_on()
         dn_nnz = jnp.zeros((), jnp.int32) if health else None
         key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
-        if ztables is None:
-            with tr.span("tables", cat="pipeline"):
-                phi_shard, varphi_shard, ztables = self._phi_fn(
-                    state.n, state.psi, k_phi
-                )
+        built_tables = ztables is None
+        if built_tables:
+            # async dispatch only: the device builds iteration-t's
+            # tables (they depend only on n/psi from t-1, already
+            # device-resident) while the prefetcher threads below read
+            # and stage block 0 — the serial tables -> stage_wait
+            # prologue becomes overlapped work. The wait moves into the
+            # "tables.build" span inside the pipeline, where the trace
+            # can prove it runs concurrently with corpus_read/z_read/h2d
+            # (benchmarks/check_obs.py --require-overlap).
+            phi_shard, varphi_shard, ztables = self._phi_fn(
+                state.n, state.psi, k_phi
+            )
             obs.metrics().counter("train.alias_rebuilds").inc()
         else:
             phi_shard, varphi_shard, ztables = ztables
@@ -350,6 +422,9 @@ class StreamingHDP:
             z_store.write, depth=self.writeback_depth,
         )
         try:
+            if built_tables:
+                with tr.span("tables.build", cat="pipeline"):
+                    jax.block_until_ready(ztables)
             staged_it = iter(staged)
             while True:
                 # the wait for the next staged block is the driver-side
@@ -438,12 +513,17 @@ class StreamingHDP:
         same key schedule, same slab store — but fully serialized: no
         prefetch/write-back threads, and an explicit device sync at
         every phase boundary, so each span of the returned
-        ``PhaseTimers`` measures exactly one pipeline phase (tables /
-        corpus_read / z_read / h2d / sweep / merge / writeback / tail)
-        and the spans sum to ~the serialized wall time. Use it to answer
-        "which phase dominates?" (benchmarks/roofline_hdp.py); use
-        ``iteration()`` for throughput — overlap is the whole point
-        there.
+        ``PhaseTimers`` measures exactly one pipeline phase
+        (tables.h2d / tables.build / tables.gather / corpus_read /
+        z_read / h2d / sweep / merge / writeback / tail) and the spans
+        sum to ~the serialized wall time. The tables sub-split
+        attributes the build pipeline: operand transfer, the fused
+        PPU+build program, and the gathered-operand sync. Use it to
+        answer "which phase dominates?" (benchmarks/roofline_hdp.py);
+        use ``iteration()`` for throughput — overlap is the whole point
+        there (the overlapped loop only *dispatches* the build and
+        absorbs the wait into the pipeline's "tables.build" span while
+        block 0 stages concurrently).
 
         Returns ``(state', timers)``.
         """
@@ -453,10 +533,21 @@ class StreamingHDP:
         if timers is None:
             timers = PhaseTimers()
         key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
-        with timers.phase("tables"):
+        # tables, attributed in three sequential sub-phases: operand H2D
+        # (the block-sparse u_mask transfer — cached device-resident, so
+        # near-zero after the first iteration; the fused build's other
+        # inputs are already device-resident), the fused PPU-draw +
+        # table-build program, and the residual sync of the gathered
+        # z-step operands (the all-gather tail — identity on one device).
+        with timers.phase("tables.h2d"):
+            if self._u_mask is not None:
+                jax.block_until_ready(self._u_mask)
+        with timers.phase("tables.build"):
             phi_shard, varphi_shard, ztables = self._phi_fn(
                 state.n, state.psi, k_phi
             )
+            jax.block_until_ready((phi_shard, varphi_shard))
+        with timers.phase("tables.gather"):
             jax.block_until_ready(ztables)
         n_run = state.n
         dh_acc = jax.device_put(

@@ -76,6 +76,7 @@ class ShardedCorpusStore:
             (self.num_docs + block_docs - 1) // block_docs, 1
         )
         self._num_tokens: Optional[int] = None
+        self._vocab_ids: Optional[np.ndarray] = None
 
     @classmethod
     def from_corpus(cls, corpus: Corpus, block_docs: int, *,
@@ -90,6 +91,30 @@ class ShardedCorpusStore:
         if self._num_tokens is None:
             self._num_tokens = int(np.asarray(self.mask).sum())
         return self._num_tokens
+
+    def vocab_ids(self) -> np.ndarray:
+        """Sorted unique word ids present (masked) anywhere in the corpus.
+
+        Computed blockwise into a (V,) seen-array — one bounded pass, no
+        whole-corpus materialization for memmap-backed stores — and
+        cached: it feeds the block-sparse table build
+        (core/streaming.py), which only constructs alias tables for
+        words the sweep can actually touch.
+        """
+        if self._vocab_ids is None:
+            seen = np.zeros((self.V,), bool)
+            for b in range(self.num_blocks):
+                blk = self.block(b)
+                ids = blk.tokens[blk.mask]
+                if ids.size:
+                    seen[ids] = True
+            self._vocab_ids = np.flatnonzero(seen).astype(np.int32)
+        return self._vocab_ids
+
+    @property
+    def vocab_coverage(self) -> float:
+        """Fraction of the vocabulary present in the corpus (<= 1.0)."""
+        return len(self.vocab_ids()) / max(self.V, 1)
 
     def block(self, b: int) -> CorpusBlock:
         if not 0 <= b < self.num_blocks:

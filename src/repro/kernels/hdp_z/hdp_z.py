@@ -43,6 +43,17 @@ scatter-adds commute), so the driver-side ``delta_n`` pass over the full
 launch. VMEM note: the revisited delta block is K*V*4 bytes resident for
 the whole grid — at vocab-sharded or CPU-bench scales this is small;
 for huge unsharded (K, V) prefer the unfused path (emit_delta=False).
+
+With ``in_kernel=True`` (the kernel-prologue alias build, gated by
+``HDPConfig.alias_in_kernel``) the packed-table inputs are replaced by
+raw supports — vals (V, W) f32, ids (V, W) i32 — plus apsi = alpha*psi
+(K,) resident in VMEM in the q_a slot. Per token the kernel DMAs the
+two raw (W,) rows (half the packed-table bytes), rebuilds
+``wa = vals * apsi[ids]``, ``q_a = sum(wa)``, and the alias partition
+via ``core.alias.alias_build_row_onehot`` (the Pallas-safe one-hot twin
+of ``alias_build`` — bitwise-equal pairing, no scatters, no 1-D iota).
+The (V, 2, W) alias-table materialization to HBM — the dominant tables
+phase — never happens.
 """
 
 from __future__ import annotations
@@ -54,6 +65,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.alias import alias_build_row_onehot
+
 
 def _z_kernel(
     # blocked VMEM inputs
@@ -61,10 +74,10 @@ def _z_kernel(
     mask_ref,     # (DB, L) bool
     z_in_ref,     # (DB, L) int32
     u_ref,        # (DB, L, 3) f32
-    qa_ref,       # (V,) f32   (VMEM-resident: <1 MiB even at V=202k)
+    qa_ref,       # (V,) f32 VMEM — in_kernel=True: apsi (K,) f32 VMEM
     # HBM (ANY) inputs, DMA'd per token
-    fpack_ref,    # (V, 2, W) f32
-    ipack_ref,    # (V, 2, W) int32
+    fpack_ref,    # (V, 2, W) f32  — in_kernel=True: vals (V, W) f32
+    ipack_ref,    # (V, 2, W) int32 — in_kernel=True: ids (V, W) int32
     # outputs (z_out, m_out, then dn when emit_delta), followed by scratch
     *rest,
     kk: int,
@@ -72,6 +85,7 @@ def _z_kernel(
     ll: int,
     db: int,
     emit_delta: bool,
+    in_kernel: bool,
 ):
     if emit_delta:
         (z_out_ref,   # (DB, L) int32
@@ -127,16 +141,27 @@ def _z_kernel(
             cf.wait()
             ci.wait()
 
-            vals = frow_ref[0, :].astype(jnp.float32)   # (W,) phi values
-            aprob = frow_ref[1, :].astype(jnp.float32)  # (W,) alias probs
-            ids = irow_ref[0, :].astype(jnp.int32)      # (W,) topic ids
-            aalias = irow_ref[1, :].astype(jnp.int32)   # (W,) donor slots
+            if in_kernel:
+                # prologue mode: raw (W,) supports arrive; wa / q_a and
+                # the alias partition are built here, in VMEM, from
+                # phi values and apsi = alpha * psi — the (V, 2, W)
+                # table round-trip never happens.
+                vals = frow_ref[...].astype(jnp.float32)  # (W,) phi values
+                ids = irow_ref[...].astype(jnp.int32)     # (W,) topic ids
+                wa = vals * qa_ref[ids]   # qa_ref holds apsi (K,) here
+                qa = jnp.sum(wa)
+                aprob, aalias = alias_build_row_onehot(wa)
+            else:
+                vals = frow_ref[0, :].astype(jnp.float32)   # (W,) phi vals
+                aprob = frow_ref[1, :].astype(jnp.float32)  # (W,) alias p
+                ids = irow_ref[0, :].astype(jnp.int32)      # (W,) topics
+                aalias = irow_ref[1, :].astype(jnp.int32)   # (W,) donors
+                qa = qa_ref[v]
 
             # term (b): doc mass over the word's non-zero topics
             mb = m_ref[ids].astype(jnp.float32)  # VMEM gather over W lanes
             wb = vals * mb
             qb = jnp.sum(wb)
-            qa = qa_ref[v]
             tot = qa + qb
 
             u1 = u_ref[d, i, 0]
@@ -181,24 +206,30 @@ def _z_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kk", "doc_block", "interpret", "emit_delta")
+    jax.jit,
+    static_argnames=("kk", "doc_block", "interpret", "emit_delta",
+                     "in_kernel"),
 )
 def hdp_z_pallas(
     tokens: jax.Array,   # (D, L) int32
     mask: jax.Array,     # (D, L) bool
     z: jax.Array,        # (D, L) int32
     uniforms: jax.Array,  # (D, L, 3) f32
-    q_a: jax.Array,      # (V,) f32
-    fpack: jax.Array,    # (V, 2, W) f32
-    ipack: jax.Array,    # (V, 2, W) int32
+    q_a: jax.Array,      # (V,) f32   — in_kernel=True: apsi (K,) f32
+    fpack: jax.Array,    # (V, 2, W) f32 — in_kernel=True: vals (V, W) f32
+    ipack: jax.Array,    # (V, 2, W) i32 — in_kernel=True: ids (V, W) i32
     *,
     kk: int,
     doc_block: int = 8,
     interpret: bool = True,
     emit_delta: bool = False,
+    in_kernel: bool = False,
 ) -> tuple[jax.Array, ...]:
     d, l = tokens.shape
-    v, _, w = fpack.shape
+    if in_kernel:
+        v, w = fpack.shape
+    else:
+        v, _, w = fpack.shape
     db = min(doc_block, d)
     # Pad the document axis up to a multiple of db with all-False mask
     # rows instead of shrinking db to a divisor of D: the old
@@ -231,9 +262,26 @@ def hdp_z_pallas(
         out_specs.append(pl.BlockSpec((kk, v), lambda i: (0, 0)))
         out_shape.append(jax.ShapeDtypeStruct((kk, v), jnp.int32))
 
+    if in_kernel:
+        # q_a slot carries apsi (K,) — VMEM resident like q_a; the row
+        # scratch shrinks to single (W,) rows (raw supports, half the
+        # per-token DMA bytes of the packed tables).
+        qa_spec = pl.BlockSpec((kk,), lambda i: (0,))
+        row_scratch = [
+            pltpu.VMEM((w,), fpack.dtype),
+            pltpu.VMEM((w,), ipack.dtype),
+        ]
+    else:
+        qa_spec = pl.BlockSpec((v,), lambda i: (0,))
+        row_scratch = [
+            pltpu.VMEM((2, w), fpack.dtype),
+            pltpu.VMEM((2, w), ipack.dtype),
+        ]
+
     out = pl.pallas_call(
         functools.partial(
-            _z_kernel, kk=kk, ww=w, ll=l, db=db, emit_delta=emit_delta
+            _z_kernel, kk=kk, ww=w, ll=l, db=db, emit_delta=emit_delta,
+            in_kernel=in_kernel,
         ),
         grid=grid,
         in_specs=[
@@ -241,16 +289,15 @@ def hdp_z_pallas(
             blk2(),  # mask
             blk2(),  # z
             blk3(),  # uniforms
-            pl.BlockSpec((v,), lambda i: (0,)),  # q_a (VMEM resident)
-            pl.BlockSpec(memory_space=pl.ANY),  # fpack (HBM)
-            pl.BlockSpec(memory_space=pl.ANY),  # ipack (HBM)
+            qa_spec,  # q_a / apsi (VMEM resident)
+            pl.BlockSpec(memory_space=pl.ANY),  # fpack / vals (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),  # ipack / ids (HBM)
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((kk,), jnp.int32),
-            pltpu.VMEM((2, w), fpack.dtype),
-            pltpu.VMEM((2, w), ipack.dtype),
+            *row_scratch,
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,

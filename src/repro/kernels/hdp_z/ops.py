@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.alias import alias_build
 from repro.kernels.hdp_z.hdp_z import hdp_z_pallas
-from repro.kernels.hdp_z.ref import hdp_z_ref
+from repro.kernels.hdp_z.ref import hdp_z_ref, hdp_z_ref_prologue
 
 _FALSY = ("0", "false", "no", "off", "")
 
@@ -40,6 +40,77 @@ def resolve_interpret(explicit: bool | None = None) -> bool:
     if env is not None:
         return env.strip().lower() not in _FALSY
     return jax.default_backend() != "tpu"
+
+
+def resolve_alias_in_kernel(
+    explicit: str | bool | None = "auto", *, interpret: bool,
+    compact: bool = False,
+) -> bool:
+    """Resolve whether the alias partition is built in the kernel prologue.
+
+    Precedence: an explicit ``"on"``/``"off"`` (or bool) wins; else the
+    ``REPRO_ALIAS_IN_KERNEL`` env var; else ``"auto"`` = on exactly when
+    the kernel is compiled (not interpret mode) — the prologue's win is
+    skipping the (V, 2, W) table HBM round-trip, which only exists on
+    real hardware; interpret mode keeps the epilogue-fused oracle path
+    unless forced on for conformance runs.
+
+    The prologue consumes raw f32 supports, so it composes with
+    ``compact=False`` only: an explicit ``"on"`` with compact tables
+    raises; env/auto resolution silently degrades to the epilogue.
+    """
+    if isinstance(explicit, bool):
+        on = explicit
+        if on and compact:
+            raise ValueError("alias_in_kernel='on' requires compact=False "
+                             "(the prologue reads raw f32 supports)")
+        return on and not compact
+    if explicit not in (None, "auto", "on", "off"):
+        raise ValueError(f"unknown alias_in_kernel mode {explicit!r}")
+    if explicit == "on":
+        if compact:
+            raise ValueError("alias_in_kernel='on' requires compact=False "
+                             "(the prologue reads raw f32 supports)")
+        return True
+    if explicit == "off":
+        return False
+    env = os.environ.get("REPRO_ALIAS_IN_KERNEL")
+    if env is not None:
+        return (env.strip().lower() not in _FALSY) and not compact
+    return (not interpret) and not compact
+
+
+def _word_supports(pt: jax.Array, w: int, order: str):
+    """Per-word top-W supports of a (V, K) phi-transpose: (vals, ids).
+
+    Row-independent (top_k / argsort / gathers act per row), so a build
+    over any gathered subset of rows is bitwise-equal to the same rows of
+    the full build — the invariant the block-sparse path relies on.
+    """
+    w = min(w, pt.shape[-1])
+    vals, idx = jax.lax.top_k(pt, w)
+    if order == "topic":
+        perm = jnp.argsort(idx, axis=-1)
+        vals = jnp.take_along_axis(vals, perm, axis=-1)
+        idx = jnp.take_along_axis(idx, perm, axis=-1)
+    elif order != "value":
+        raise ValueError(f"unknown table order {order!r}")
+    return vals.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "order"))
+def build_word_sparse_supports(
+    phi: jax.Array, w: int, order: str = "value"
+) -> tuple[jax.Array, jax.Array]:
+    """Raw word-sparse supports for the kernel-prologue alias build.
+
+    Returns ``(vals (V, W) f32, ids (V, W) int32)`` — the top-W phi
+    values and topic ids per word, *without* the alias epilogue: the
+    prologue reconstructs ``wa = vals * (alpha * psi)[ids]``, ``q_a``,
+    and the alias partition per token in VMEM, so only half the table
+    bytes (no aprob/aalias planes, no q_a) ever touch HBM.
+    """
+    return _word_supports(phi.T, w, order)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "compact", "order"))
@@ -71,16 +142,7 @@ def build_word_sparse_tables(
         raise ValueError(
             f"compact int16 topic ids need K <= 32768, got K={phi.shape[0]}"
         )
-    pt = phi.T  # (V, K)
-    w = min(w, phi.shape[0])
-    vals, idx = jax.lax.top_k(pt, w)
-    if order == "topic":
-        perm = jnp.argsort(idx, axis=-1)
-        vals = jnp.take_along_axis(vals, perm, axis=-1)
-        idx = jnp.take_along_axis(idx, perm, axis=-1)
-    elif order != "value":
-        raise ValueError(f"unknown table order {order!r}")
-    ids = idx.astype(jnp.int32)
+    vals, ids = _word_supports(phi.T, w, order)
     wa = vals * (jnp.float32(alpha) * psi)[ids]
     q_a = jnp.sum(wa, axis=-1)
     aprob, aalias = alias_build(wa)
@@ -97,6 +159,59 @@ def build_word_sparse_tables(
     return q_a.astype(jnp.float32), fpack, ipack
 
 
+@functools.partial(
+    jax.jit, static_argnames=("w", "cap", "compact", "order")
+)
+def build_word_sparse_tables_masked(
+    phi: jax.Array, psi: jax.Array, alpha: float, w: int,
+    u_mask: jax.Array, cap: int,
+    compact: bool = False, order: str = "value",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Block-sparse ``build_word_sparse_tables``: only vocab rows flagged
+    in ``u_mask`` (V,) bool are built; the rest stay zero.
+
+    ``cap`` (static) must bound the number of flagged rows — rows are
+    compacted via a fixed-size ``jnp.nonzero`` gather, built as a
+    (cap, ...) subset, and scattered back into zero-initialized full
+    (V, ...) outputs. Fill slots alias row 0 (so row 0 gets a real
+    table even when unflagged) and scatter duplicate *identical*
+    values, so the result is deterministic, and since every
+    table op is row-independent (see ``_word_supports``), flagged rows
+    are bitwise-equal to the dense build — the sweep only ever gathers
+    table rows at token positions, so a sweep over tokens covered by
+    ``u_mask`` is bitwise-unchanged. Cost drops from O(V * K) to
+    O(cap * K) — the block-sparse tables lever for streamed blocks and
+    fold-in request batches that touch a fraction of V.
+    """
+    if compact and phi.shape[0] > 2**15:
+        raise ValueError(
+            f"compact int16 topic ids need K <= 32768, got K={phi.shape[0]}"
+        )
+    v = phi.shape[1]
+    cap = min(cap, v)
+    (rows,) = jnp.nonzero(u_mask, size=cap, fill_value=0)
+    vals, ids = _word_supports(phi.T[rows], w, order)
+    wa = vals * (jnp.float32(alpha) * psi)[ids]
+    q_a_sub = jnp.sum(wa, axis=-1)
+    aprob, aalias = alias_build(wa)
+    if compact:
+        fpack_sub = jnp.stack(
+            [vals.astype(jnp.bfloat16), aprob.astype(jnp.bfloat16)], axis=1
+        )
+        ipack_sub = jnp.stack(
+            [ids.astype(jnp.int16), aalias.astype(jnp.int16)], axis=1
+        )
+    else:
+        fpack_sub = jnp.stack([vals, aprob], axis=1)
+        ipack_sub = jnp.stack([ids, aalias.astype(jnp.int32)], axis=1)
+    ww = vals.shape[-1]
+    q_a = jnp.zeros((v,), jnp.float32).at[rows].set(
+        q_a_sub.astype(jnp.float32))
+    fpack = jnp.zeros((v, 2, ww), fpack_sub.dtype).at[rows].set(fpack_sub)
+    ipack = jnp.zeros((v, 2, ww), ipack_sub.dtype).at[rows].set(ipack_sub)
+    return q_a, fpack, ipack
+
+
 def max_column_nnz(phi: jax.Array) -> jax.Array:
     """Largest number of topics any single word appears in (for choosing W)."""
     return jnp.max(jnp.sum((phi > 0).astype(jnp.int32), axis=0))
@@ -104,16 +219,31 @@ def max_column_nnz(phi: jax.Array) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bucket", "order", "compact", "interpret", "emit_delta"),
+    static_argnames=(
+        "bucket", "order", "compact", "interpret", "emit_delta", "in_kernel"
+    ),
 )
 def _z_step_pallas_fused(
     tokens, mask, z, phi, psi, alpha, uniforms,
-    *, bucket, order, compact, interpret, emit_delta,
+    *, bucket, order, compact, interpret, emit_delta, in_kernel=False,
 ):
     """Table build + kernel as ONE jitted program: the alias epilogue
     (top_k / argsort / alias partition) lowers on-device right before the
     pallas_call, so there is no host round-trip between building the
-    word-sparse tables and sweeping with them."""
+    word-sparse tables and sweeping with them.
+
+    With ``in_kernel=True`` the alias epilogue disappears entirely: only
+    the raw supports (vals, ids) are materialized, and the kernel builds
+    wa / q_a / the alias row per token in VMEM (the kernel-prologue
+    path)."""
+    if in_kernel:
+        vals, ids = build_word_sparse_supports(phi, bucket, order=order)
+        apsi = jnp.float32(alpha) * psi
+        return hdp_z_pallas(
+            tokens, mask, z, uniforms, apsi, vals, ids,
+            kk=phi.shape[0], interpret=interpret, emit_delta=emit_delta,
+            in_kernel=True,
+        )
     q_a, fpack, ipack = build_word_sparse_tables(
         phi, psi, alpha, bucket, compact=compact, order=order
     )
@@ -126,6 +256,7 @@ def _z_step_pallas_fused(
 def z_step_pallas(
     tokens, mask, z, phi, psi, alpha, uniforms, bucket, *,
     order="value", compact=False, interpret=None, emit_delta=False,
+    alias_in_kernel="auto",
 ):
     """Drop-in z-step: builds tables then runs the kernel (W = bucket),
     fused into a single jitted dispatch (no host hop between the table
@@ -133,22 +264,40 @@ def z_step_pallas(
 
     ``order``/``compact`` select the table variant (see
     ``build_word_sparse_tables``); ``interpret=None`` resolves via
-    ``resolve_interpret`` (env var / backend default). Returns
-    ``(z_new, m)`` like every z-step (core/hdp.py docstring), plus the
-    fused (K, V) ``delta_n`` when ``emit_delta=True``."""
+    ``resolve_interpret`` (env var / backend default);
+    ``alias_in_kernel`` ("auto"/"on"/"off", see
+    ``resolve_alias_in_kernel``) selects the kernel-prologue alias
+    build over the epilogue-fused tables. Returns ``(z_new, m)`` like
+    every z-step (core/hdp.py docstring), plus the fused (K, V)
+    ``delta_n`` when ``emit_delta=True``."""
+    interp = resolve_interpret(interpret)
     return _z_step_pallas_fused(
         tokens, mask, z, phi, psi, alpha, uniforms,
         bucket=bucket, order=order, compact=compact,
-        interpret=resolve_interpret(interpret), emit_delta=emit_delta,
+        interpret=interp, emit_delta=emit_delta,
+        in_kernel=resolve_alias_in_kernel(
+            alias_in_kernel, interpret=interp, compact=compact
+        ),
     )
 
 
 def z_step_ref(
     tokens, mask, z, phi, psi, alpha, uniforms, bucket, *,
-    order="value", compact=False, emit_delta=False,
+    order="value", compact=False, emit_delta=False, alias_in_kernel="off",
 ):
     """Same math via the pure-jnp oracle (bitwise-identical to the kernel);
-    returns ``(z_new, m)`` (plus ``delta_n`` when ``emit_delta=True``)."""
+    returns ``(z_new, m)`` (plus ``delta_n`` when ``emit_delta=True``).
+    ``alias_in_kernel="on"`` mirrors the kernel-prologue path (per-token
+    alias build from raw supports) instead of the table epilogue."""
+    if resolve_alias_in_kernel(
+        alias_in_kernel, interpret=True, compact=compact
+    ):
+        vals, ids = build_word_sparse_supports(phi, bucket, order=order)
+        apsi = jnp.float32(alpha) * psi
+        return hdp_z_ref_prologue(
+            tokens, mask, z, uniforms, apsi, vals, ids, kk=phi.shape[0],
+            emit_delta=emit_delta,
+        )
     q_a, fpack, ipack = build_word_sparse_tables(
         phi, psi, alpha, bucket, compact=compact, order=order
     )

@@ -20,6 +20,11 @@ z is initialized from the word tables' global term alone (k ~ phi[k,v]
 alpha psi_k via one alias draw per token) — the document prior before
 any doc-side evidence, and identical across execution strategies because
 it reads only the shared tables.
+
+``restrict_snapshot`` is the serving-side face of block-sparse tables:
+because the sweep only ever row-gathers by token id, a request batch can
+fold into a snapshot sliced to its own vocabulary (with tokens remapped)
+bitwise-identically to the full artifact.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import conformance as C
 from repro.core import hdp as H
@@ -36,6 +42,47 @@ from repro.serve.snapshot import ModelSnapshot
 
 def doc_key(base_key: jax.Array, seed: jax.Array) -> jax.Array:
     return jax.random.fold_in(base_key, seed)
+
+
+def restrict_snapshot(snap: ModelSnapshot, tokens, *, bucket: int = 64):
+    """Per-request-batch block-sparse tables: slice the snapshot down to
+    the vocabulary rows a query batch actually touches.
+
+    Every fold-in table access is a per-token row gather — ``init_z``
+    and the sweep read ``q_a[tokens]`` / ``fpack[tokens]`` /
+    ``ipack[tokens]``, nothing scans the full V axis — so folding a
+    batch into a row-restricted snapshot with remapped tokens is
+    bitwise-identical to folding into the full one (the uniforms depend
+    only on seeds, never on vocabulary ids), while the table bytes the
+    request stages on device shrink from O(V·W) to O(U·W) for U unique
+    batch tokens. At paper scale (PubMed V≈141k vs a few hundred
+    distinct words per request batch) that is the difference between
+    re-staging the whole artifact and a few kilobytes.
+
+    The restricted vocabulary axis is padded up to a multiple of
+    ``bucket`` with duplicate rows of the first id, so ``foldin_docs``'s
+    jit cache sees a bounded set of shapes across request batches
+    instead of one program per distinct U.
+
+    Host-side (numpy) preprocessing — call it per request batch, outside
+    jit. Returns ``(sub_snapshot, remapped_tokens)``.
+    """
+    tok = np.asarray(tokens)
+    ids = np.unique(tok).astype(np.int64)
+    if ids.size == 0:
+        ids = np.zeros((1,), np.int64)
+    lut = np.zeros((snap.V,), np.int32)
+    lut[ids] = np.arange(ids.size, dtype=np.int32)
+    pad = (-ids.size) % max(bucket, 1)
+    if pad:
+        ids = np.concatenate([ids, np.full((pad,), ids[0], ids.dtype)])
+    rows = jnp.asarray(ids)
+    sub = ModelSnapshot(
+        phi=snap.phi[:, rows], psi=snap.psi, q_a=snap.q_a[rows],
+        fpack=snap.fpack[rows], ipack=snap.ipack[rows],
+        alpha=snap.alpha, it=snap.it,
+    )
+    return sub, jnp.asarray(lut[tok])
 
 
 def sweep_uniforms(

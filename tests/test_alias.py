@@ -7,8 +7,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alias import (
-    alias_build, alias_build_np, alias_build_scan, alias_sample,
-    alias_sample_np,
+    alias_build, alias_build_np, alias_build_row_onehot, alias_build_scan,
+    alias_sample, alias_sample_np,
 )
 
 
@@ -100,6 +100,37 @@ def test_psum_build_matches_scan_reference(rng):
         b = jax.tree.map(np.asarray, alias_build_scan(p))
         np.testing.assert_array_equal(a[0], b[0], row)
         np.testing.assert_array_equal(a[1], b[1], row)
+
+
+@pytest.mark.parametrize("k", [2, 3, 255, 256, 257])
+def test_onehot_twin_bitwise_equals_flat_build(k, rng):
+    """``alias_build_row_onehot`` — the Pallas-safe formulation the
+    kernel-prologue alias build runs per token in VMEM — must be BITWISE
+    equal to the production ``alias_build``, not just pmf-equivalent:
+    the prologue path replaces tables the epilogue materialized, and the
+    in-kernel/epilogue conformance tests compare sampled chains exactly.
+    Swept across K straddling the 256 lane boundary and the degenerate
+    partitions (all-small, all-large, exact ties) where pairing order is
+    most fragile."""
+    rows = [
+        rng.gamma(0.3, size=k).astype(np.float32),        # generic
+        np.full(k, 1.0 / (2 * k), np.float32),            # all small
+        np.full(k, 2.0, np.float32),                      # all large (tied)
+        np.full(k, 1.0 / k, np.float32),                  # exact mean tie
+        np.zeros(k, np.float32),                          # padded word
+    ]
+    hot = np.zeros(k, np.float32)
+    hot[k // 2] = 3.0
+    rows.append(hot)                                      # single winner
+    mixed = rng.gamma(0.3, size=k).astype(np.float32)
+    mixed[rng.random(k) < 0.5] = 0.0
+    rows.append(mixed)                                    # sparse support
+    p = jnp.asarray(np.stack(rows))
+    prob_f, alias_f = jax.tree.map(np.asarray, alias_build(p))
+    prob_o, alias_o = jax.tree.map(
+        np.asarray, jax.jit(jax.vmap(alias_build_row_onehot))(p))
+    np.testing.assert_array_equal(prob_f, prob_o)
+    np.testing.assert_array_equal(alias_f, alias_o)
 
 
 def test_build_is_deterministic(rng):

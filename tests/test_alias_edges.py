@@ -35,6 +35,38 @@ def test_all_zero_row_falls_back_to_uniform(k, rng):
     np.testing.assert_allclose(freq, np.full(k, 1.0 / k), atol=0.02)
 
 
+def test_nonfinite_weights_are_clamped_not_propagated(rng):
+    """NaN/Inf/negative entries must behave exactly like zero weight.
+
+    Regression: ``_normalized`` used to divide by the raw sum, so one Inf
+    made total=inf and the whole row collapsed to zeros with a NaN at
+    the Inf entry — a table that sampled garbage without tripping any
+    error. Now non-finite entries are clamped *before* normalizing, so
+    the finite entries keep their exact relative table."""
+    k = 16
+    base = rng.gamma(0.5, size=k).astype(np.float32)
+    base[:4] = 0.0
+    ref_prob, ref_alias = jax.tree.map(
+        np.asarray, alias_build(jnp.asarray(base)))
+    for bad in (np.nan, np.inf, -np.inf, -3.0):
+        p = base.copy()
+        p[1] = bad  # a zero-weight slot: clamping must reproduce zero
+        prob, alias = jax.tree.map(np.asarray, alias_build(jnp.asarray(p)))
+        assert np.isfinite(prob).all(), bad
+        np.testing.assert_array_equal(prob, ref_prob, err_msg=str(bad))
+        np.testing.assert_array_equal(alias, ref_alias, err_msg=str(bad))
+
+
+@pytest.mark.parametrize("k", [2, 7, 64])
+def test_entirely_nonfinite_row_falls_back_to_uniform(k):
+    """A row with no usable mass after clamping (all NaN/Inf) is the
+    all-zero case: uniform table, every draw finite and in range."""
+    p = jnp.full((k,), jnp.nan, jnp.float32).at[0].set(jnp.inf)
+    prob, alias = jax.tree.map(np.asarray, alias_build(p))
+    np.testing.assert_allclose(prob, np.ones(k))
+    assert ((alias >= 0) & (alias < k)).all()
+
+
 @pytest.mark.parametrize("k", [2, 5, 33])
 @pytest.mark.parametrize("hot", [0, 1, -1])
 def test_single_nonzero_row_samples_it_with_probability_one(k, hot, rng):

@@ -135,6 +135,105 @@ def test_zstep_order_kwarg_actually_changes_samples(rng):
     assert (np.asarray(z_val) != np.asarray(z_top)).any()
 
 
+# -- kernel-prologue alias build ----------------------------------------------
+
+@pytest.mark.parametrize("k,v,d,l,w", [
+    (8, 24, 4, 16, 8),
+    (24, 60, 16, 32, 16),
+])
+def test_prologue_kernel_bitwise_equals_prologue_oracle(rng, k, v, d, l, w):
+    """``alias_in_kernel="on"``: the kernel that builds wa / q_a / the
+    alias row per token in VMEM must stay bitwise-equal to the pure-jnp
+    prologue oracle, with and without the fused delta_n."""
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, k, v, d, l)
+    for emit in (False, True):
+        out_k = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, w,
+                                   alias_in_kernel="on", emit_delta=emit)
+        out_r = zops.z_step_ref(tokens, mask, z0, phi, psi, 0.3, u, w,
+                                alias_in_kernel="on", emit_delta=emit)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prologue_bitwise_equals_epilogue_tables(rng):
+    """The prologue builds each token's alias row from raw supports with
+    ``alias_build_row_onehot`` — bitwise the flat build the epilogue
+    tables come from — so the two execution paths must sample the SAME
+    chain, not just the same law. This is the exact-arithmetic
+    equivalence the ``alias_in_kernel`` switch rests on."""
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, 24, 60, 8, 32)
+    z_on, m_on, dn_on = zops.z_step_pallas(
+        tokens, mask, z0, phi, psi, 0.3, u, 16,
+        alias_in_kernel="on", emit_delta=True)
+    z_off, m_off, dn_off = zops.z_step_pallas(
+        tokens, mask, z0, phi, psi, 0.3, u, 16,
+        alias_in_kernel="off", emit_delta=True)
+    np.testing.assert_array_equal(np.asarray(z_on), np.asarray(z_off))
+    np.testing.assert_array_equal(np.asarray(m_on), np.asarray(m_off))
+    np.testing.assert_array_equal(np.asarray(dn_on), np.asarray(dn_off))
+    # and with topic-ordered tables (the conformance layout)
+    z_t_on = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 16,
+                                order="topic", alias_in_kernel="on")[0]
+    z_t_off = zops.z_step_pallas(tokens, mask, z0, phi, psi, 0.3, u, 16,
+                                 order="topic", alias_in_kernel="off")[0]
+    np.testing.assert_array_equal(np.asarray(z_t_on), np.asarray(z_t_off))
+
+
+def test_alias_in_kernel_resolver():
+    """Precedence and the compact guard of ``resolve_alias_in_kernel``."""
+    r = zops.resolve_alias_in_kernel
+    assert r("on", interpret=True) is True
+    assert r("off", interpret=False) is False
+    assert r(True, interpret=True) is True
+    assert r(False, interpret=False) is False
+    # auto: on exactly when compiled, never with compact tables
+    assert r("auto", interpret=False) is True
+    assert r("auto", interpret=True) is False
+    assert r("auto", interpret=False, compact=True) is False
+    # explicit on + compact is a contradiction, not a silent downgrade
+    with pytest.raises(ValueError, match="compact"):
+        r("on", interpret=False, compact=True)
+    with pytest.raises(ValueError, match="compact"):
+        r(True, interpret=False, compact=True)
+    with pytest.raises(ValueError, match="alias_in_kernel"):
+        r("sometimes", interpret=True)
+
+
+def test_alias_in_kernel_env_var(monkeypatch):
+    monkeypatch.setenv("REPRO_ALIAS_IN_KERNEL", "1")
+    assert zops.resolve_alias_in_kernel("auto", interpret=True) is True
+    # env force silently degrades with compact (no raise: ambient config)
+    assert zops.resolve_alias_in_kernel(
+        "auto", interpret=True, compact=True) is False
+    monkeypatch.setenv("REPRO_ALIAS_IN_KERNEL", "0")
+    assert zops.resolve_alias_in_kernel("auto", interpret=False) is False
+
+
+# -- block-sparse (vocab-masked) tables ---------------------------------------
+
+def test_masked_tables_bitwise_equal_dense_on_flagged_rows(rng):
+    """``build_word_sparse_tables_masked`` must reproduce the dense build
+    bitwise on every flagged vocab row (table ops are row-independent),
+    and a sweep whose tokens stay inside the mask must not be able to
+    tell the builders apart."""
+    k, v = 16, 40
+    n, phi, psi, tokens, mask, z0, u = make_problem(rng, k, v, 6, 24)
+    u_mask = np.zeros((v,), bool)
+    u_mask[np.unique(np.asarray(tokens))] = True
+    q_d, f_d, i_d = zops.build_word_sparse_tables(phi, psi, 0.3, k)
+    q_m, f_m, i_m = zops.build_word_sparse_tables_masked(
+        phi, psi, 0.3, k, jnp.asarray(u_mask), int(u_mask.sum()))
+    rows = np.flatnonzero(u_mask)
+    np.testing.assert_array_equal(np.asarray(q_m)[rows], np.asarray(q_d)[rows])
+    np.testing.assert_array_equal(np.asarray(f_m)[rows], np.asarray(f_d)[rows])
+    np.testing.assert_array_equal(np.asarray(i_m)[rows], np.asarray(i_d)[rows])
+    from repro.kernels.hdp_z.ref import hdp_z_ref
+    out_d = hdp_z_ref(tokens, mask, z0, u, q_d, f_d, i_d, kk=k)
+    out_m = hdp_z_ref(tokens, mask, z0, u, q_m, f_m, i_m, kk=k)
+    for a, b in zip(out_d, out_m):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("d", [3, 5, 7, 11, 13])
 def test_kernel_doc_padding_matches_oracle(rng, d):
     """Document counts prime/coprime with doc_block must not degrade the

@@ -71,3 +71,66 @@ def test_zero_rows_stay_zero():
     phi = ppu_normalize(varphi)
     assert float(phi[0].sum()) == 1.0
     assert float(phi[1:].sum()) == 0.0
+
+
+def test_budgeted_draw_same_distribution_as_dense(rng):
+    """The vectorized budgeted decomposition (background CDF inversion +
+    fixed-size non-zero gather) must match the dense Poisson(beta + n)
+    draw in distribution: cellwise means agree on zero AND non-zero
+    cells, and the budget size does not change the law."""
+    from repro.core.polya_urn import ppu_counts_budgeted
+
+    k, v, beta = 6, 40, 0.05
+    n = np.zeros((k, v), np.int32)
+    rr, cc = rng.integers(0, k, 30), rng.integers(0, v, 30)
+    n[rr, cc] += rng.poisson(8, 30)
+    nj = jnp.asarray(n)
+    keys = jax.random.split(jax.random.key(4), 400)
+    dense = np.stack([
+        np.asarray(ppu_sample(kk, nj, beta)[1]) for kk in keys[:200]])
+    b_small = 1 << int(np.count_nonzero(n) - 1).bit_length()
+    budgeted = np.stack([
+        np.asarray(ppu_counts_budgeted(kk, nj, beta, b_small))
+        for kk in keys[200:]])
+    nz = n > 0
+    np.testing.assert_allclose(dense[:, nz].mean(0), budgeted[:, nz].mean(0),
+                               atol=1.2)
+    np.testing.assert_allclose(dense[:, ~nz].mean(), budgeted[:, ~nz].mean(),
+                               atol=0.02)
+    # slack budget: identical stream to the tight budget on the n-part
+    # positions is NOT required, but the law must be unchanged.
+    wide = np.stack([
+        np.asarray(ppu_counts_budgeted(kk, nj, beta, 4 * b_small))
+        for kk in keys[200:260]])
+    np.testing.assert_allclose(budgeted[:60, nz].mean(), wide[:, nz].mean(),
+                               rtol=0.2)
+
+
+def test_budgeted_draw_beta_above_bound_falls_back_dense(rng):
+    """beta > 0.5 exceeds the truncated background inversion's exactness
+    bound — the budgeted entry point must produce the dense draw's exact
+    stream there instead of a silently-wrong background."""
+    from repro.core.polya_urn import ppu_counts, ppu_counts_budgeted
+
+    n = jnp.asarray(rng.poisson(1.0, size=(8, 32)).astype(np.int32))
+    key = jax.random.key(5)
+    np.testing.assert_array_equal(
+        np.asarray(ppu_counts_budgeted(key, n, 0.8, 64)),
+        np.asarray(ppu_counts(key, n, 0.8)))
+
+
+def test_budgeted_zero_background_matches_poisson_pmf(rng):
+    """Background cells (n == 0) under the truncated CDF inversion:
+    empirical frequencies of 0/1/2 match Poisson(beta) to MC accuracy."""
+    import math
+
+    from repro.core.polya_urn import ppu_counts_budgeted
+
+    beta = 0.3
+    n = jnp.zeros((1, 4096), jnp.int32)
+    draws = np.concatenate([
+        np.asarray(ppu_counts_budgeted(kk, n, beta, 8)).ravel()
+        for kk in jax.random.split(jax.random.key(6), 10)])
+    freq = np.bincount(draws, minlength=4) / draws.size
+    pmf = [math.exp(-beta) * beta**i / math.factorial(i) for i in range(3)]
+    np.testing.assert_allclose(freq[:3], pmf, atol=0.01)

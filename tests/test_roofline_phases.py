@@ -18,8 +18,8 @@ from repro.data.synthetic import planted_topics_corpus
 from repro.launch.mesh import make_host_mesh
 from repro.perf import PhaseTimers
 
-PHASES = {"tables", "corpus_read", "z_read", "h2d", "sweep", "merge",
-          "writeback", "tail"}
+PHASES = {"tables.h2d", "tables.build", "tables.gather", "corpus_read",
+          "z_read", "h2d", "sweep", "merge", "writeback", "tail"}
 
 
 def _driver(rng, impl="sparse"):
@@ -61,14 +61,17 @@ def test_profiled_phases_cover_the_iteration(rng):
     nb = drv.store.num_blocks
     assert timers.counts["sweep"] == nb
     assert timers.counts["corpus_read"] == nb + 1
-    assert timers.counts["tables"] == timers.counts["tail"] == 1
+    # the tables sub-phases are strictly sequential siblings, once each
+    for ph in ("tables.h2d", "tables.build", "tables.gather"):
+        assert timers.counts[ph] == 1
+    assert timers.counts["tail"] == 1
     # the spans tile the serialized call: nothing above wall, and no
     # large unattributed gap (loose bound — CI clocks are noisy)
     assert timers.total <= wall
     assert timers.total >= 0.5 * wall
     # accumulating across iterations keeps adding into the same timers
     state, timers = drv.iteration_profiled(state, timers)
-    assert timers.counts["tables"] == 2
+    assert timers.counts["tables.build"] == 2
 
 
 def test_phase_timers_math():

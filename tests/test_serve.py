@@ -353,3 +353,43 @@ def test_heldout_perplexity_trained_beats_untrained(trained, snap):
     # sane range: far better than uniform-over-V, better than untrained
     assert 1.0 < p_trained < V, p_trained
     assert p_trained < p_untrained, (p_trained, p_untrained)
+
+
+@pytest.mark.parametrize("impl", ["dense", "sparse", "pallas"])
+def test_restricted_snapshot_foldin_bitwise(snap, trained, impl):
+    """Per-request-batch block-sparse tables: folding a query batch into
+    a snapshot restricted to the batch's own vocabulary (tokens remapped)
+    must reproduce the full-snapshot fold-in BITWISE — mixtures and final
+    assignments — under every execution strategy. The sweep only ever
+    row-gathers by token id, so the restriction is free of approximation;
+    this is what lets a serving fleet stage O(batch vocab) instead of
+    O(V) table bytes per request."""
+    state, cfg, (q_tokens, q_mask) = trained
+    seeds = jnp.arange(q_tokens.shape[0], dtype=jnp.int32)
+    key = jax.random.key(13)
+    theta_full, z_full = F.foldin_docs(
+        snap, jnp.asarray(q_tokens), jnp.asarray(q_mask), seeds, key,
+        burnin=BURNIN, impl=impl, return_z=True)
+    sub, remapped = F.restrict_snapshot(snap, q_tokens, bucket=16)
+    assert sub.V < snap.V and sub.V % 16 == 0
+    assert sub.W == snap.W and sub.K == snap.K
+    theta_sub, z_sub = F.foldin_docs(
+        sub, remapped, jnp.asarray(q_mask), seeds, key,
+        burnin=BURNIN, impl=impl, return_z=True)
+    np.testing.assert_array_equal(np.asarray(theta_full),
+                                  np.asarray(theta_sub))
+    np.testing.assert_array_equal(np.asarray(z_full), np.asarray(z_sub))
+
+
+def test_restricted_snapshot_bucket_bounds_shapes(snap, trained):
+    """Different batches over the same snapshot land on a bounded set of
+    restricted shapes (V rounded up to the bucket), so the fold-in jit
+    cache cannot grow one program per distinct batch vocabulary."""
+    state, cfg, (q_tokens, _) = trained
+    sub_a, _ = F.restrict_snapshot(snap, q_tokens[:2], bucket=16)
+    sub_b, _ = F.restrict_snapshot(snap, q_tokens[2:5], bucket=16)
+    assert sub_a.V % 16 == 0 and sub_b.V % 16 == 0
+    # empty batch degrades to the 1-row (bucket-padded) snapshot
+    sub_e, rem_e = F.restrict_snapshot(
+        snap, np.zeros((0, 4), np.int32), bucket=16)
+    assert sub_e.V == 16 and rem_e.shape == (0, 4)
