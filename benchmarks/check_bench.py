@@ -59,7 +59,7 @@ def _lane(key):
     return key[0], key[2], key[3]
 
 
-def compare(fresh, baseline, threshold):
+def compare(fresh, baseline, threshold, obs_overhead_threshold=3.0):
     base_by_key = {_key(r): r for r in baseline if _metric(r)[0]}
     fresh_keys = set()
     regressions = []
@@ -69,6 +69,14 @@ def compare(fresh, baseline, threshold):
         if name is None:
             continue
         fresh_keys.add(_key(rec))
+        # obs overhead (perf_hdp --obs-overhead): PR 7's "metrics within
+        # noise" claim, measured per record. Warn-only — same noisy-CPU
+        # rationale as the throughput keys.
+        ovh = rec.get("obs_overhead_pct")
+        if ovh is not None and ovh > obs_overhead_threshold:
+            print(f"::warning title=obs overhead::{_key(rec)}: metrics-on "
+                  f"run {ovh}% slower than metrics-off (threshold "
+                  f"{obs_overhead_threshold}%)")
         base = base_by_key.get(_key(rec))
         if base is None or name not in base:
             print(f"{_key(rec)}: no baseline record (new config?) — "
@@ -115,12 +123,17 @@ def main():
                     help="flag when fresh < (1 - threshold) * baseline")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on regression (default: warn only)")
+    ap.add_argument("--obs-overhead-threshold", type=float, default=3.0,
+                    help="warn when a fresh record's obs_overhead_pct "
+                         "exceeds this (percent)")
     args = ap.parse_args()
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    regressions, byte_drifts = compare(fresh, baseline, args.threshold)
+    regressions, byte_drifts = compare(
+        fresh, baseline, args.threshold,
+        obs_overhead_threshold=args.obs_overhead_threshold)
     if regressions:
         print(f"{len(regressions)} regression(s) beyond "
               f"{args.threshold:.0%} (warn-only)" if not args.strict else

@@ -1,0 +1,194 @@
+"""Hard CI gate for the convergence observatory (obs/diagnostics.py).
+
+Runs a short seeded streaming chain on a planted-topics corpus twice —
+once with a metrics sink attached, once without — and asserts, from the
+metrics JSONL the first run wrote:
+
+  * the joint log-likelihood trend improves (mean of the last third of
+    the ``train.log_lik`` series beats the first third — a planted
+    corpus mixes fast, so a flat/declining trend means the estimator or
+    the sampler broke);
+  * K* stays in the sane band [1, K] at every iteration and the chain
+    ends with >= 2 live topics (the planted corpus has 4);
+  * topic lifecycle events fired (births + deaths > 0 — a random-init
+    chain over K >> 4 planted topics must churn) and the ESS of the
+    log-likelihood chain is nonzero once enough samples exist;
+  * every diagnostics gauge in the published contract is present in the
+    final snapshot.
+
+Then the observatory's core promise: the metrics-off chain's final
+state (n, psi, l, and the PRNG key) is **bitwise identical** to the
+metrics-on chain's — diagnostics are pure reads and consume no
+randomness. Unlike check_bench (warn-only; CPU noise), all of this is
+deterministic, so any violation exits non-zero.
+
+  PYTHONPATH=src python -m benchmarks.check_health
+"""
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def run_chain(args, metrics_path):
+    """One seeded streaming chain; returns the final state. Attaches a
+    JSONL sink for the duration iff ``metrics_path`` is given."""
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.core import hdp as H
+    from repro.core.sharded import ShardedHDP
+    from repro.core.streaming import StreamingHDP
+    from repro.data.stream import ShardedCorpusStore
+    from repro.data.synthetic import planted_topics_corpus
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(args.seed)
+    corpus, _ = planted_topics_corpus(rng, D=args.docs, V=args.vocab,
+                                      K_true=4)
+    mesh = make_host_mesh()
+    n_dev = len(jax.devices())
+    v_pad = ((corpus.V + mesh.shape["model"] - 1)
+             // mesh.shape["model"]) * mesh.shape["model"]
+    store = ShardedCorpusStore.from_corpus(corpus, args.block_docs,
+                                           doc_multiple=n_dev)
+    cfg = H.HDPConfig(K=args.topics, V=v_pad,
+                      bucket=min(args.topics, store.max_len),
+                      z_impl="sparse",
+                      hist_cap=min(store.max_len, 256))
+    stream = StreamingHDP(ShardedHDP(mesh, cfg), store)
+    if metrics_path:
+        obs.enable_metrics(metrics_path)
+    try:
+        state = stream.init_state(jax.random.key(args.seed))
+        for _ in range(args.iters):
+            state = stream.iteration(state)
+    finally:
+        if metrics_path:
+            obs.disable_metrics()
+    return state
+
+
+def _series(snaps, name):
+    out = []
+    for s in snaps:
+        for m in s.get("metrics", []):
+            if m["name"] == name and not m.get("labels"):
+                out.append(m.get("value"))
+                break
+    return out
+
+
+def run_gate(args) -> list:
+    """All gate assertions; returns the list of failure strings."""
+    import jax
+    import numpy as np
+
+    failures = []
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "metrics.jsonl")
+        state_on = run_chain(args, path)
+        with open(path) as f:
+            snaps = [json.loads(line) for line in f if line.strip()]
+
+        # drop the sink's final close() snapshot when it duplicates the
+        # last iteration (same gauge values, no new iteration between).
+        lls = _series(snaps, "train.log_lik")[:args.iters]
+        if len(lls) < args.iters:
+            failures.append(
+                f"train.log_lik series has {len(lls)} samples, expected "
+                f"{args.iters} (one per iteration)")
+        if len(lls) >= 6:
+            third = max(len(lls) // 3, 1)
+            first, last = lls[:third], lls[-third:]
+            if not (sum(last) / len(last) > sum(first) / len(first)):
+                failures.append(
+                    f"log-likelihood trend not improving: first-third "
+                    f"mean {sum(first) / len(first):.2f} vs last-third "
+                    f"mean {sum(last) / len(last):.2f}")
+
+        kstars = _series(snaps, "train.k_star")
+        if not kstars:
+            failures.append("no train.k_star series in the metrics file")
+        else:
+            bad = [k for k in kstars if not 1 <= k <= args.topics]
+            if bad:
+                failures.append(
+                    f"K* left the sane band [1, {args.topics}]: {bad}")
+            if kstars[-1] < 2:
+                failures.append(
+                    f"final K* = {kstars[-1]} — the planted corpus has 4 "
+                    "topics, a healthy chain keeps >= 2 alive")
+
+        final = {m["name"]: m for m in snaps[-1]["metrics"]
+                 if not m.get("labels")}
+        births = final.get("train.topic_births", {}).get("value", 0)
+        deaths = final.get("train.topic_deaths", {}).get("value", 0)
+        if births + deaths <= 0:
+            failures.append(
+                "no topic lifecycle events: a random-init chain on a "
+                "4-topic planted corpus must churn (topics die as mass "
+                "concentrates, or come alive from empty columns)")
+        ess_ll = final.get("train.ess_log_lik", {}).get("value")
+        if args.iters >= 8 and not (ess_ll and ess_ll > 0):
+            failures.append(
+                f"train.ess_log_lik = {ess_ll!r}, expected > 0 after "
+                f"{args.iters} iterations")
+
+        contract = [
+            "train.log_lik", "train.log_lik_per_token",
+            "train.topic_mass_entropy", "train.topic_mass_max_frac",
+            "train.top_word_drift", "train.topic_births",
+            "train.topic_deaths", "train.ess_log_lik", "train.ess_k_star",
+            "train.geweke_log_lik", "train.geweke_k_star",
+        ]
+        missing = [n for n in contract if n not in final]
+        if missing:
+            failures.append(
+                f"final snapshot missing contract gauges: {missing}")
+
+    # the bitwise gate: same seed, no sink — identical chain.
+    state_off = run_chain(args, None)
+    for name in ("n", "psi", "l"):
+        a = np.asarray(getattr(state_on, name))
+        b = np.asarray(getattr(state_off, name))
+        if not np.array_equal(a, b):
+            failures.append(
+                f"state.{name} differs between metrics-on and "
+                "metrics-off chains — diagnostics perturbed the sampler")
+    ka = np.asarray(jax.random.key_data(state_on.key))
+    kb = np.asarray(jax.random.key_data(state_off.key))
+    if not np.array_equal(ka, kb):
+        failures.append(
+            "PRNG key differs between metrics-on and metrics-off chains "
+            "— diagnostics consumed randomness")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=20,
+                    help="chain length (>= 8 to exercise the ESS gate)")
+    ap.add_argument("--docs", type=int, default=96)
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--topics", type=int, default=16)
+    ap.add_argument("--block-docs", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    failures = run_gate(args)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print(f"health ok: {args.iters}-iteration seeded chain — improving "
+          "log-likelihood, K* in band, lifecycle events fired, ESS > 0, "
+          "metrics-off bitwise-identical to metrics-on")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,14 @@ def check_trace(path: str, min_tracks: int, require_overlap):
         return _fail(f"trace {path}: unreadable/invalid JSON ({e})")
     if not isinstance(doc, dict) or "traceEvents" not in doc:
         return _fail(f"trace {path}: missing traceEvents key")
+    dropped = doc.get("otherData", {}).get("dropped_events", 0)
+    if dropped:
+        # warn-only: a truncated trace is still schema-valid, but the
+        # overlap verdict below is about a PARTIAL timeline — say so
+        # loudly instead of letting it silently pass.
+        print(f"::warning::trace {path}: {dropped} events dropped "
+              "(bounded buffer overflow) — overlap check ran on a "
+              "truncated trace")
     evs = doc["traceEvents"]
     tracks = {e["tid"]: e["args"]["name"] for e in evs
               if e.get("ph") == "M" and e.get("name") == "thread_name"}
@@ -110,16 +118,27 @@ def check_metrics(path: str, require: list):
     if not lines:
         return _fail(f"metrics {path}: empty (no snapshots flushed)")
     last = None
+    prev_seq = None
     for i, line in enumerate(lines, 1):
         try:
             snap = json.loads(line)
         except json.JSONDecodeError as e:
             return _fail(f"metrics {path}:{i}: invalid JSON ({e})")
-        if set(snap) != {"ts", "metrics"}:
+        # proc/seq are the shard-merge keys (added by the observatory
+        # PR); pre-shard files carried only ts + metrics — both valid.
+        if not ({"ts", "metrics"} <= set(snap)
+                <= {"ts", "metrics", "proc", "seq"}):
             return _fail(
-                f"metrics {path}:{i}: keys {sorted(snap)}, "
-                "expected exactly ['metrics', 'ts']"
+                f"metrics {path}:{i}: keys {sorted(snap)}, expected "
+                "['metrics', 'ts'] plus optional ['proc', 'seq']"
             )
+        if "seq" in snap:
+            if prev_seq is not None and snap["seq"] <= prev_seq:
+                return _fail(
+                    f"metrics {path}:{i}: seq {snap['seq']} not "
+                    f"monotone (previous {prev_seq})"
+                )
+            prev_seq = snap["seq"]
         for m in snap["metrics"]:
             kind = m.get("type")
             if kind not in ("counter", "gauge", "histogram"):
@@ -141,6 +160,15 @@ def check_metrics(path: str, require: list):
             elif "value" not in m:
                 return _fail(f"metrics {path}:{i}: {kind} missing value")
         last = snap
+    # obs self-state: finalize() publishes the sinks' own loss counters
+    # as gauges in the final snapshot — warn when anything was dropped.
+    for m in last["metrics"]:
+        if m["name"] in ("obs.trace_dropped_events",
+                         "obs.metrics_suppressed_flushes") \
+                and m.get("value"):
+            print(f"::warning::metrics {path}: {m['name']} = "
+                  f"{m['value']} (observability data was lost or "
+                  "rate-limited during the run)")
     names = {m["name"] for m in last["metrics"]}
     missing = [n for n in require if n not in names]
     if missing:

@@ -82,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs.diagnostics import NULL_CLOCK, PhaseClock
 from repro.core import hdp as H
 from repro.core.polya_urn import ppu_sample, ppu_sample_budgeted
 from repro.core.sharded import ShardedHDP
@@ -232,6 +233,10 @@ class StreamingHDP:
         # foreign-dir checkpoint stores (save dirs that are NOT a disk
         # slab store's home); slab stores track their own dirty stamps.
         self._zstores: dict[str, ZBlockStore] = {}
+        # convergence observatory (obs/diagnostics.py), built lazily on
+        # the first metrics-on iteration so a metrics-off run never
+        # compiles its reductions.
+        self._diag = None
 
     def _masked_phi(self, mfn, n, psi, k_phi):
         """Block-sparse table build: same (n, psi, k_phi) signature as
@@ -390,6 +395,10 @@ class StreamingHDP:
         # run.
         health = obs.metrics_on()
         dn_nnz = jnp.zeros((), jnp.int32) if health else None
+        # driver-side wall per phase (train.phase_ms counters — the
+        # dashboard's phase-fraction bar); the metrics-off twin is a
+        # shared no-op.
+        clock = PhaseClock() if health else NULL_CLOCK
         key, k_phi, k_u, k_l, k_psi = self._split_fn(state.key)
         built_tables = ztables is None
         if built_tables:
@@ -423,14 +432,16 @@ class StreamingHDP:
         )
         try:
             if built_tables:
-                with tr.span("tables.build", cat="pipeline"):
+                with tr.span("tables.build", cat="pipeline"), \
+                        clock.time("tables.build"):
                     jax.block_until_ready(ztables)
             staged_it = iter(staged)
             while True:
                 # the wait for the next staged block is the driver-side
                 # pipeline bubble: a long span here means H2D staging
                 # (or the disk z read upstream) is not keeping up.
-                with tr.span("stage_wait", cat="pipeline"):
+                with tr.span("stage_wait", cat="pipeline"), \
+                        clock.time("stage_wait"):
                     item = next(staged_it, None)
                 if item is None:
                     break
@@ -439,7 +450,8 @@ class StreamingHDP:
                 # is bitwise the monolithic sampler; later blocks fold
                 # their index.
                 k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
-                with tr.span("sweep", cat="pipeline", block=b):
+                with tr.span("sweep", cat="pipeline", block=b), \
+                        clock.time("sweep"):
                     z_b, dn_c, dh_c = self._z_fn(
                         ztables, z_b, tokens_b, mask_b, state.psi, k_ub
                     )
@@ -448,7 +460,8 @@ class StreamingHDP:
                         dn_nnz = self._nnz_fn(dn_nnz, dn_c)
                 # narrow on device so the write-back D2H moves packed
                 # bytes (the slab store lands them as-is).
-                with tr.span("wb_submit", cat="pipeline", block=b):
+                with tr.span("wb_submit", cat="pipeline", block=b), \
+                        clock.time("wb_submit"):
                     writer.submit(b, z_b if self.z_dtype == np.int32
                                   else self._narrow_fn(z_b))
                 done += 1
@@ -456,7 +469,8 @@ class StreamingHDP:
                 if (ckpt_dir and ckpt_every_blocks
                         and cursor < self.store.num_blocks
                         and cursor % ckpt_every_blocks == 0):
-                    with tr.span("checkpoint", cat="pipeline", block=b):
+                    with tr.span("checkpoint", cat="pipeline", block=b), \
+                            clock.time("checkpoint"):
                         writer.flush()  # checkpoint reads the stored slabs
                         self._save_partial(
                             ckpt_dir, state, cursor, n_run, dh_acc)
@@ -471,23 +485,29 @@ class StreamingHDP:
         finally:
             staged.close()  # unblock the prefetch workers on early exit
             writer.close()  # drain outstanding write-backs
-        with tr.span("tail", cat="pipeline"):
+        with tr.span("tail", cat="pipeline"), clock.time("tail"):
             l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
         out = StreamingState(
             n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
             key=key, it=state.it + 1, z_blocks=z_store,
         )
-        self._publish_health(out, dn_nnz, done)
+        self._publish_health(out, dn_nnz, done, dh_acc=dh_acc, clock=clock)
         return out
 
-    def _publish_health(self, state: StreamingState, dn_nnz, blocks_done):
+    def _publish_health(self, state: StreamingState, dn_nnz, blocks_done,
+                        dh_acc=None, clock=None):
         """Per-iteration model-health metrics into the global registry.
 
         Cheap host-side counters/gauges are always maintained; the
         device-derived gauges (live topic count K*, delta_n sparsity —
-        the "doubly sparse" quantities the method's speed rests on) are
-        only computed when ``iteration`` accumulated them, i.e. when a
-        metrics sink is attached. Ends with a rate-limited JSONL flush.
+        the "doubly sparse" quantities the method's speed rests on) and
+        the convergence-observatory diagnostics (joint log-likelihood,
+        topic lifecycle, ESS/Geweke — obs/diagnostics.py) are only
+        computed when ``iteration`` accumulated them, i.e. when a
+        metrics sink is attached. All of them are pure reads of the
+        state, so the metrics-on chain stays bitwise-identical to the
+        metrics-off one (benchmarks/check_health.py gates this). Ends
+        with a rate-limited JSONL flush.
         """
         M = obs.metrics()
         store = state.z_blocks
@@ -504,6 +524,16 @@ class StreamingHDP:
             denom = max(blocks_done, 1) * self.cfg.K * self.cfg.V
             M.gauge("train.delta_nnz_frac").set(
                 round(int(dn_nnz) / denom, 6))
+            if dh_acc is not None:
+                if self._diag is None:
+                    from repro.obs.diagnostics import ConvergenceDiagnostics
+                    self._diag = ConvergenceDiagnostics(
+                        self.cfg, num_tokens=self.store.num_tokens)
+                self._diag.update(M, state.n, dh_acc, state.psi)
+        if clock is not None:
+            for phase, sec in clock.acc.items():
+                M.counter("train.phase_ms", phase=phase).inc(
+                    round(sec * 1e3, 3))
         obs.flush_metrics()
 
     def iteration_profiled(self, state: StreamingState, timers=None):

@@ -52,14 +52,32 @@ def metrics_on() -> bool:
 
 
 def enable_metrics(path: str, *, every_s: Optional[float] = None,
-                   min_interval_s: float = 0.0) -> MetricsLogger:
-    """Attach (or replace) the registry's JSONL sink."""
+                   min_interval_s: float = 0.0,
+                   proc: Optional[str] = None) -> MetricsLogger:
+    """Attach (or replace) the registry's JSONL sink. ``proc`` fixes
+    the shard label stamped on every snapshot line (default: the
+    ``REPRO_METRICS_PROC`` env var, else ``pid<pid>``)."""
     global _LOGGER
     if _LOGGER is not None:
         _LOGGER.close()
     _LOGGER = MetricsLogger(_REGISTRY, path, every_s=every_s,
-                            min_interval_s=min_interval_s)
+                            min_interval_s=min_interval_s, proc=proc)
     return _LOGGER
+
+
+def disable_metrics() -> Optional[dict]:
+    """Close and detach the JSONL sink (no-op without one), returning
+    its accounting ``stats()``. Metric *values* survive in the registry
+    — only visibility changes, so an obs-off measurement pass (e.g.
+    ``perf_hdp --obs-overhead``) can bracket a sink without touching
+    anything else."""
+    global _LOGGER
+    if _LOGGER is None:
+        return None
+    stats = _LOGGER.stats()
+    _LOGGER.close()
+    _LOGGER = None
+    return stats
 
 
 def enable_tracing(path: Optional[str] = None) -> SpanTracer:
@@ -94,17 +112,46 @@ def setup_from_env():
           metrics_path=os.environ.get("REPRO_METRICS") or None)
 
 
-def finalize():
+def finalize() -> dict:
     """Flush + close the sinks: save the trace file (if tracing) and
     write a final metrics snapshot (if a sink is attached). Idempotent;
-    CLIs call this in a ``finally``."""
+    CLIs call this in a ``finally``.
+
+    Returns a summary of what each sink actually captured — including
+    the tracer's bounded-buffer drop count and the logger's
+    suppressed/dropped flush state — and publishes those as
+    ``obs.trace_dropped_events`` / ``obs.metrics_suppressed_flushes``
+    gauges *before* the final snapshot, so a truncated trace or a
+    rate-limited sink is visible in the metrics file itself
+    (``check_obs.py`` warns on them). Drops also warn on stderr here."""
+    import sys
+
     global _LOGGER
+    out: dict = {}
     if _TRACER.enabled:
-        _TRACER.save()
+        if _LOGGER is not None and _TRACER.dropped:
+            _REGISTRY.gauge("obs.trace_dropped_events").set(_TRACER.dropped)
+        path = _TRACER.save()
+        out["trace"] = {"path": path, "events": len(_TRACER.events()),
+                        "dropped_events": _TRACER.dropped}
+        if _TRACER.dropped:
+            print(f"WARNING: tracer dropped {_TRACER.dropped} events "
+                  "(bounded buffer full) — the saved trace is truncated",
+                  file=sys.stderr)
         _TRACER.stop()
     if _LOGGER is not None:
-        _LOGGER.close()
+        if _LOGGER.suppressed:
+            _REGISTRY.gauge("obs.metrics_suppressed_flushes").set(
+                _LOGGER.suppressed)
+        path = _LOGGER.path
+        _LOGGER.close()  # final snapshot carries the gauges set above
+        stats = _LOGGER.stats()
         _LOGGER = None
+        out["metrics"] = {"path": path, **stats}
+        if stats["dropped"]:
+            print(f"WARNING: metrics logger dropped {stats['dropped']} "
+                  "late flushes (sink already closed)", file=sys.stderr)
+    return out
 
 
 def reset_for_tests():

@@ -20,18 +20,28 @@ CI.
 
 Schema (one JSON object per line):
 
-    {"ts": <unix seconds>, "metrics": [
+    {"ts": <unix seconds>,
+     "proc": str,   # stable per-process shard label (shard-merge key)
+     "seq": int,    # per-logger snapshot sequence number (0, 1, ...)
+     "metrics": [
        {"name": str, "type": "counter",   "labels": {..}, "value": num},
        {"name": str, "type": "gauge",     "labels": {..}, "value": num},
        {"name": str, "type": "histogram", "labels": {..},
         "count": int, "sum": num, "le": [edge...],
         "bucket_counts": [int...]}   # len == len(le) + 1 (+inf bucket)
     ]}
+
+``proc``/``seq`` are what make a *directory* of per-process shard files
+mergeable (``launch/monitor.py --merge``): counters sum across procs,
+gauges resolve last-write by (ts, seq), histogram bucket counts add.
+Readers must tolerate their absence — pre-shard files carried only
+``ts`` + ``metrics``.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from typing import Optional, Sequence
@@ -40,6 +50,38 @@ from typing import Optional, Sequence
 # where serving latencies live (1-500ms), sparse above.
 LATENCY_MS_EDGES = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
                     500.0, 1000.0, 2000.0, 5000.0)
+
+
+def hist_percentile(edges: Sequence[float], counts: Sequence[float],
+                    q: float) -> Optional[float]:
+    """Estimated q-th percentile (q in [0, 100]) from histogram bucket
+    counts — the one shared implementation behind
+    ``Histogram.percentile`` and the monitor/dashboard readouts.
+
+    The rank is linearly interpolated *within* the winning bucket
+    (``lo + frac * (hi - lo)``), never snapped to an edge. Degenerate
+    inputs resolve instead of crashing or fabricating values: an empty
+    histogram (or one with no finite edges) returns None, and a rank
+    landing in the unbounded overflow bucket clamps to the last finite
+    edge — a lower bound, which is the only honest answer there.
+    """
+    edges = list(edges)
+    counts = list(counts)
+    total = sum(counts)
+    if total <= 0 or not edges:
+        return None
+    rank = q / 100.0 * total
+    seen = 0.0
+    for i, c in enumerate(counts):
+        if c > 0 and seen + c >= rank:
+            if i >= len(edges):  # unbounded overflow bucket
+                return float(edges[-1])
+            lo = 0.0 if i == 0 else float(edges[i - 1])
+            hi = float(edges[i])
+            frac = min(max((rank - seen) / c, 0.0), 1.0)
+            return lo + frac * (hi - lo)
+        seen += c
+    return float(edges[-1])
 
 
 class Counter:
@@ -125,21 +167,11 @@ class Histogram:
 
     def percentile(self, q: float) -> Optional[float]:
         """Estimated q-th percentile (q in [0, 100]) from the bucket
-        counts; None when empty."""
+        counts; None when empty. See ``hist_percentile`` for the
+        interpolation and overflow-bucket semantics."""
         with self._lock:
-            counts, total = list(self.bucket_counts), self.count
-        if total == 0:
-            return None
-        rank = q / 100.0 * total
-        seen = 0.0
-        for i, c in enumerate(counts):
-            if seen + c >= rank and c > 0:
-                lo = 0.0 if i == 0 else self.edges[i - 1]
-                hi = self.edges[i] if i < len(self.edges) else lo * 2 or 1.0
-                frac = (rank - seen) / c
-                return lo + frac * (hi - lo)
-            seen += c
-        return self.edges[-1]
+            counts = list(self.bucket_counts)
+        return hist_percentile(self.edges, counts, q)
 
     def snapshot_value(self):
         with self._lock:
@@ -230,14 +262,31 @@ class MetricsLogger:
     explicit flush calls (the trainer flushes at iteration boundaries,
     a serving fleet on the period). ``min_interval_s`` rate-limits
     explicit ``flush(force=False)`` calls so a tight caller loop cannot
-    bloat the file."""
+    bloat the file.
+
+    Every line carries a stable ``proc`` shard label (``proc`` arg,
+    else ``$REPRO_METRICS_PROC``, else ``pid<pid>``) and a monotone
+    ``seq`` number, which is what lets ``monitor.py --merge`` reduce a
+    directory of per-process shard files correctly. The logger also
+    accounts for its own behavior — ``flushes`` (lines written),
+    ``suppressed`` (rate-limited ``flush(force=False)`` calls) and
+    ``dropped`` (flush attempts after close, i.e. data that never
+    reached the file) — surfaced by ``obs.finalize()``.
+    """
 
     def __init__(self, registry: MetricsRegistry, path: str, *,
                  every_s: Optional[float] = None,
-                 min_interval_s: float = 0.0):
+                 min_interval_s: float = 0.0,
+                 proc: Optional[str] = None):
         self.registry = registry
         self.path = path
         self.min_interval_s = min_interval_s
+        self.proc = (proc or os.environ.get("REPRO_METRICS_PROC")
+                     or f"pid{os.getpid()}")
+        self.seq = 0
+        self.flushes = 0
+        self.suppressed = 0
+        self.dropped = 0
         self._f = open(path, "a")
         self._lock = threading.Lock()
         self._last_flush = 0.0
@@ -257,19 +306,31 @@ class MetricsLogger:
 
     def flush(self, force: bool = True):
         """Append one snapshot line. ``force=False`` respects
-        ``min_interval_s`` (and is a no-op after close)."""
+        ``min_interval_s``; a flush after close counts as ``dropped``
+        (late data that never reached the file)."""
         now = time.time()
         with self._lock:
             if self._closed:
+                self.dropped += 1
                 return
             if not force and now - self._last_flush < self.min_interval_s:
+                self.suppressed += 1
                 return
             self._last_flush = now
             line = json.dumps(
-                {"ts": round(now, 3), "metrics": self.registry.snapshot()}
+                {"ts": round(now, 3), "proc": self.proc, "seq": self.seq,
+                 "metrics": self.registry.snapshot()}
             )
             self._f.write(line + "\n")
             self._f.flush()
+            self.seq += 1
+            self.flushes += 1
+
+    def stats(self) -> dict:
+        """The sink's own accounting (surfaced by ``obs.finalize()``)."""
+        with self._lock:
+            return {"proc": self.proc, "flushes": self.flushes,
+                    "suppressed": self.suppressed, "dropped": self.dropped}
 
     def close(self):
         """Final snapshot + stop the periodic flusher (idempotent)."""

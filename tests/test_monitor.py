@@ -1,0 +1,182 @@
+"""launch/monitor.py: snapshot reading, shard-aware merge reduction,
+and render robustness on degenerate inputs.
+
+The merge semantics are the load-bearing contract for the coming
+multi-process trainer: counters sum across shards, gauges resolve
+last-write-wins by (ts, seq), histogram bucket counts add elementwise
+when edges agree — and a counter reset inside one shard must clamp to
+a non-negative rate instead of rendering garbage.
+"""
+
+import io
+import json
+
+from repro.launch.monitor import (counter_rate, load_merged,
+                                  merge_snapshots, read_snapshots, render)
+
+
+def _c(name, value, **labels):
+    return {"name": name, "type": "counter", "labels": labels,
+            "value": value}
+
+
+def _g(name, value, **labels):
+    return {"name": name, "type": "gauge", "labels": labels,
+            "value": value}
+
+
+def _h(name, le, counts, **labels):
+    return {"name": name, "type": "histogram", "labels": labels,
+            "count": sum(counts), "sum": 1.0, "le": list(le),
+            "bucket_counts": list(counts)}
+
+
+def _snap(ts, metrics, proc=None, seq=None):
+    out = {"ts": ts, "metrics": metrics}
+    if proc is not None:
+        out["proc"] = proc
+    if seq is not None:
+        out["seq"] = seq
+    return out
+
+
+# -- reading ------------------------------------------------------------------
+
+def test_read_snapshots_tolerates_garbage(tmp_path):
+    p = tmp_path / "m.jsonl"
+    good = _snap(1.0, [_c("c", 1)])
+    p.write_text(json.dumps(good) + "\n"
+                 + "\n"                       # blank line
+                 + '{"ts": 2.0, "metr'        # truncated mid-flush
+                 + "\n" + "[1, 2, 3]\n")      # parseable but not a snapshot
+    snaps = read_snapshots(str(p))
+    assert snaps == [good]
+
+
+def test_read_snapshots_missing_file():
+    assert read_snapshots("/nonexistent/nope.jsonl") == []
+
+
+# -- merge reduction ----------------------------------------------------------
+
+def test_merge_sums_counters_across_shards():
+    merged = merge_snapshots([
+        _snap(1.0, [_c("train.tokens_swept", 100)], proc="p0", seq=0),
+        _snap(1.5, [_c("train.tokens_swept", 250)], proc="p1", seq=0),
+    ])
+    (m,) = merged["metrics"]
+    assert m["value"] == 350
+    assert merged["ts"] == 1.5
+    assert merged["procs"] == ["p0", "p1"]
+
+
+def test_merge_gauges_last_write_wins_by_ts_then_seq():
+    # p1 has the newer ts -> its gauge wins regardless of list order
+    merged = merge_snapshots([
+        _snap(2.0, [_g("train.k_star", 7)], proc="p1", seq=0),
+        _snap(1.0, [_g("train.k_star", 3)], proc="p0", seq=5),
+    ])
+    assert merged["metrics"][0]["value"] == 7
+    # equal ts -> the higher seq wins (the tie-break the seq field buys)
+    merged = merge_snapshots([
+        _snap(1.0, [_g("g", 1)], proc="a", seq=9),
+        _snap(1.0, [_g("g", 2)], proc="b", seq=3),
+    ])
+    assert merged["metrics"][0]["value"] == 1
+
+
+def test_merge_histograms_elementwise_when_edges_match():
+    merged = merge_snapshots([
+        _snap(1.0, [_h("lat", [1.0, 2.0], [1, 2, 3], bucket=16)]),
+        _snap(2.0, [_h("lat", [1.0, 2.0], [4, 0, 1], bucket=16)]),
+    ])
+    (m,) = merged["metrics"]
+    assert m["bucket_counts"] == [5, 2, 4]
+    assert m["count"] == 11
+
+
+def test_merge_histogram_edge_mismatch_keeps_first_buckets():
+    merged = merge_snapshots([
+        _snap(1.0, [_h("lat", [1.0, 2.0], [1, 2, 3])]),
+        _snap(2.0, [_h("lat", [5.0, 9.0], [4, 0, 1])]),
+    ])
+    (m,) = merged["metrics"]
+    assert m["le"] == [1.0, 2.0]            # earliest shard's edges
+    assert m["bucket_counts"] == [1, 2, 3]  # mismatched buckets not added
+    assert m["count"] == 11                 # count/sum still aggregate
+
+
+def test_merge_keeps_distinct_label_sets_apart():
+    merged = merge_snapshots([
+        _snap(1.0, [_c("slo_ok", 1, bucket=16), _c("slo_ok", 2, bucket=32)]),
+        _snap(2.0, [_c("slo_ok", 10, bucket=16)]),
+    ])
+    by_label = {json.dumps(m["labels"]): m["value"]
+                for m in merged["metrics"]}
+    assert by_label == {'{"bucket": 16}': 11, '{"bucket": 32}': 2}
+
+
+def test_merge_does_not_mutate_inputs():
+    snap = _snap(1.0, [_h("lat", [1.0], [1, 1])])
+    merge_snapshots([snap, _snap(2.0, [_h("lat", [1.0], [2, 2])])])
+    assert snap["metrics"][0]["bucket_counts"] == [1, 1]
+
+
+def test_load_merged_over_shard_dir(tmp_path):
+    for proc, vals in (("p0", (10, 30)), ("p1", (5, 25))):
+        with open(tmp_path / f"{proc}.jsonl", "w") as f:
+            for seq, v in enumerate(vals):
+                f.write(json.dumps(_snap(
+                    float(seq), [_c("tok", v)], proc=proc, seq=seq)) + "\n")
+    prev, cur = load_merged(str(tmp_path))
+    assert prev["metrics"][0]["value"] == 15
+    assert cur["metrics"][0]["value"] == 55
+    # non-jsonl files are ignored; an empty dir yields no snapshots
+    assert load_merged(str(tmp_path / "missing")) == []
+
+
+def test_load_merged_single_snapshot_shard(tmp_path):
+    """A shard with only one snapshot suppresses the prev frame — rates
+    must never compare windows of different shard coverage."""
+    with open(tmp_path / "p0.jsonl", "w") as f:
+        f.write(json.dumps(_snap(1.0, [_c("c", 1)], proc="p0", seq=0)) + "\n")
+        f.write(json.dumps(_snap(2.0, [_c("c", 2)], proc="p0", seq=1)) + "\n")
+    with open(tmp_path / "p1.jsonl", "w") as f:
+        f.write(json.dumps(_snap(2.0, [_c("c", 5)], proc="p1", seq=0)) + "\n")
+    snaps = load_merged(str(tmp_path))
+    assert len(snaps) == 1
+    assert snaps[0]["metrics"][0]["value"] == 7
+
+
+# -- rates + render -----------------------------------------------------------
+
+def test_counter_rate_clamps_resets():
+    assert counter_rate(150, 100, 10.0) == 5.0
+    # a restart dropped the counter: current value IS the new increase
+    assert counter_rate(30, 100, 10.0) == 3.0
+    assert counter_rate(30, None, 10.0) is None
+    assert counter_rate(30, 100, None) is None
+
+
+def test_render_smoke_and_degenerate_histograms():
+    buf = io.StringIO()
+    render([
+        _snap(1.0, [_c("c", 10), _g("g", 1.5),
+                    _h("empty", [1.0, 2.0], [0, 0, 0]),
+                    _h("single", [4.0], [3, 0])]),
+        _snap(2.0, [_c("c", 4),  # reset between snapshots
+                    _g("g", 2.5),
+                    _h("empty", [1.0, 2.0], [0, 0, 0]),
+                    _h("single", [4.0], [3, 0])]),
+    ], out=buf)
+    text = buf.getvalue()
+    assert "(4.00/s)" in text       # clamped reset rate, not negative
+    assert "p50=-" in text          # empty histogram renders, no crash
+    assert "p50=2.00" in text       # single-bucket interpolation
+    assert "-- gauges" in text
+
+
+def test_render_empty():
+    buf = io.StringIO()
+    render([], out=buf)
+    assert "no snapshots" in buf.getvalue()

@@ -64,6 +64,24 @@ def test_histogram_buckets_and_percentile():
     assert Histogram(edges=(1.0,)).percentile(50) is None
 
 
+def test_hist_percentile_interpolates_within_bucket():
+    from repro.obs.metrics import hist_percentile
+
+    h = Histogram(edges=(1.0, 10.0, 100.0))
+    for v in (0.5, 0.7, 5.0, 50.0, 500.0):
+        h.observe(v)
+    # rank 2.5 of 5 lands mid-second-bucket: 1 + 0.5/1 * (10-1) = 5.5,
+    # never an edge value.
+    assert h.percentile(50) == pytest.approx(5.5)
+    # a rank in the unbounded overflow bucket clamps to the last finite
+    # edge (a lower bound) instead of fabricating an upper one.
+    assert h.percentile(99) == pytest.approx(100.0)
+    # degenerate inputs resolve, not crash
+    assert hist_percentile([], [], 50) is None
+    assert hist_percentile([1.0], [0, 0], 50) is None
+    assert hist_percentile([4.0], [2, 0], 50) == pytest.approx(2.0)
+
+
 def test_histogram_rejects_bad_edges():
     with pytest.raises(ValueError):
         Histogram(edges=(1.0, 1.0, 2.0))
@@ -103,16 +121,30 @@ def test_metrics_logger_jsonl(tmp_path):
     r = MetricsRegistry()
     r.counter("c").inc()
     path = str(tmp_path / "m.jsonl")
-    log = MetricsLogger(r, path)
+    log = MetricsLogger(r, path, proc="w0")
     log.flush()
     r.counter("c").inc()
     log.close()  # final snapshot
     lines = [json.loads(s) for s in open(path).read().splitlines()]
     assert len(lines) == 2
-    for line in lines:
-        assert set(line) == {"ts", "metrics"}
+    for i, line in enumerate(lines):
+        assert set(line) == {"ts", "proc", "seq", "metrics"}
+        assert line["proc"] == "w0"
+        assert line["seq"] == i  # monotone per-logger sequence
     assert lines[0]["metrics"][0]["value"] == 1
     assert lines[1]["metrics"][0]["value"] == 2
+
+
+def test_metrics_logger_proc_default_and_env(tmp_path, monkeypatch):
+    r = MetricsRegistry()
+    monkeypatch.delenv("REPRO_METRICS_PROC", raising=False)
+    log = MetricsLogger(r, str(tmp_path / "a.jsonl"))
+    assert log.proc == f"pid{os.getpid()}"
+    log.close()
+    monkeypatch.setenv("REPRO_METRICS_PROC", "shard3")
+    log = MetricsLogger(r, str(tmp_path / "b.jsonl"))
+    assert log.proc == "shard3"
+    log.close()
 
 
 def test_metrics_logger_rate_limit(tmp_path):
@@ -123,7 +155,17 @@ def test_metrics_logger_rate_limit(tmp_path):
     log.flush(force=False)  # rate-limited away
     log.flush(force=True)
     log.close()
-    assert len(open(path).read().splitlines()) == 3  # 1 + forced + close
+    lines = open(path).read().splitlines()
+    assert len(lines) == 3  # 1 + forced + close
+    # seq numbers every WRITTEN line contiguously (suppressed flushes
+    # must not burn sequence numbers — the merge sort key relies on it)
+    assert [json.loads(s)["seq"] for s in lines] == [0, 1, 2]
+    stats = log.stats()
+    assert stats["flushes"] == 3
+    assert stats["suppressed"] == 1
+    assert stats["dropped"] == 0
+    log.flush()  # after close: data that never reached the file
+    assert log.stats()["dropped"] == 1
 
 
 # -- span tracer --------------------------------------------------------------
@@ -252,6 +294,48 @@ def test_setup_and_finalize(tmp_path):
     assert lines and json.loads(lines[-1])["metrics"][0]["value"] == 1
 
 
+def test_finalize_returns_sink_summary(tmp_path):
+    trace_path = str(tmp_path / "t.json")
+    metrics_path = str(tmp_path / "m.jsonl")
+    obs.setup(trace=trace_path, metrics_path=metrics_path)
+    with obs.tracer().span("s"):
+        pass
+    obs.flush_metrics(force=True)
+    out = obs.finalize()
+    assert out["trace"]["path"] == trace_path
+    assert out["trace"]["events"] >= 1
+    assert out["trace"]["dropped_events"] == 0
+    assert out["metrics"]["path"] == metrics_path
+    assert out["metrics"]["flushes"] == 2  # explicit + close
+    assert out["metrics"]["dropped"] == 0
+    assert obs.finalize() == {}  # idempotent: sinks already detached
+
+
+def test_finalize_surfaces_trace_drops(tmp_path):
+    """A truncated trace must be visible in the final metrics snapshot
+    (obs.trace_dropped_events), not just in the trace file."""
+    trace_path = str(tmp_path / "t.json")
+    metrics_path = str(tmp_path / "m.jsonl")
+    obs.setup(trace=trace_path, metrics_path=metrics_path)
+    old_cap = obs.tracer().max_events
+    obs.tracer().max_events = 2
+    try:
+        for i in range(6):
+            with obs.tracer().span(f"s{i}"):
+                pass
+        out = obs.finalize()
+    finally:
+        obs.tracer().max_events = old_cap
+    assert out["trace"]["dropped_events"] > 0
+    doc = json.load(open(trace_path))
+    assert doc["otherData"]["dropped_events"] == \
+        out["trace"]["dropped_events"]
+    last = json.loads(open(metrics_path).read().splitlines()[-1])
+    gauges = {m["name"]: m["value"] for m in last["metrics"]}
+    assert gauges["obs.trace_dropped_events"] == \
+        out["trace"]["dropped_events"]
+
+
 def test_disabled_by_default():
     assert not obs.metrics_on()
     assert obs.tracer().span("anything") is _NULL_SPAN
@@ -376,6 +460,45 @@ def test_engine_latency_window_accounting():
     s = st.summary()
     assert s["latency_window"] == len(st.latencies_s)
     assert s["latencies_dropped"] == 4
+
+
+def test_router_slo_accounting_survives_latency_eviction():
+    """Satellite: the bounded latency window evicts raw samples under
+    load, but SLO tallies are classified at completion time and must
+    NOT shrink with the window — at ensemble >= 2, where each request
+    completes only once both subtask versions post."""
+    from repro.serve.router import AdmissionRouter
+
+    n_req = 10
+    r = AdmissionRouter(buckets=(16,), max_pending=64, slo_ms=60_000.0)
+    r._LAT_CAP = 8  # instance attr shadows the class cap
+    for rid in range(n_req):
+        r.submit(rid, np.arange(4), versions=(1, 2))
+    while True:
+        tasks = r.pull(64, timeout=0.0)
+        if not tasks:
+            break
+        for t in tasks:
+            r.post(t, np.full(3, 0.5, np.float32))
+    out = r.drain(timeout=5.0)
+    assert len(out) == n_req
+
+    s = r.latency_summary()
+    # raw-window accounting: every completion either retained or
+    # counted as evicted — one latency per REQUEST, not per subtask
+    assert s["latency_window"] + s["latencies_dropped"] == n_req
+    assert s["latencies_dropped"] == 4  # half the cap evicted once
+    # SLO accounting: immune to eviction, every request classified once
+    assert s["slo_ok"] + s["slo_miss"] == n_req
+    assert s["slo_ok"] == n_req  # minute-scale SLO cannot miss here
+    assert r.completed_total() == n_req
+    # per-bucket registry counters agree with the router's tallies
+    M = obs.metrics()
+    assert M.get("serve.slo_ok", bucket=16).value == n_req
+    assert M.get("serve.slo_miss", bucket=16) is None \
+        or M.get("serve.slo_miss", bucket=16).value == 0
+    assert M.get("serve.latency_ms", bucket=16).count == n_req
+    r.close()
 
 
 def test_router_slo_validation():
