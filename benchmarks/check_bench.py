@@ -5,11 +5,12 @@ artifact against the committed baseline, record by record (matched on
 mode / impl / block geometry / workers / slots), in two tiers:
 
 * **Gating** (exit 1): the deterministic byte-volume keys —
-  ``writeback_mb_per_iter`` and ``zstore_read_mb_per_iter``. These are
-  exact functions of block geometry, z dtype and iteration count, not
-  of machine speed, so any drift beyond rounding is a real pipeline
-  change (e.g. packed slabs silently widening) and fails the check on
-  every runner.
+  ``writeback_mb_per_iter``, ``zstore_read_mb_per_iter`` and
+  ``delta_reduce_mb_per_iter``. These are exact functions of block
+  geometry, z dtype, the fixed-seed chain and iteration count, not of
+  machine speed, so any drift beyond rounding is a real pipeline change
+  (e.g. packed slabs silently widening, or the sparse delta exchange
+  falling back to dense) and fails the check on every runner.
 * **Warn-only**: the throughput keys — ``tokens_per_s`` for streaming
   records, ``docs_per_s`` for serving records — beyond ``--threshold``
   (default 20%). CI runners have noisy, heterogeneous CPUs, so a hard
@@ -26,21 +27,28 @@ import sys
 
 # deterministic per-record byte-volume keys: exact machine-independent
 # functions of the pipeline's data movement. Gated hard (see docstring).
-BYTE_KEYS = ("writeback_mb_per_iter", "zstore_read_mb_per_iter")
+# delta_reduce_mb_per_iter is the lane-mode sparse exchange: a fixed-seed
+# chain visits the same topics, so its packed byte volume is as
+# deterministic as the slab traffic.
+BYTE_KEYS = ("writeback_mb_per_iter", "zstore_read_mb_per_iter",
+             "delta_reduce_mb_per_iter")
 
 
 def _key(rec):
     # streaming records gained a z_store field with the pluggable slab
-    # store and a z_dtype field with packed slabs; older baselines
-    # without them were implicitly RAM-backed int32.
+    # store and a z_dtype field with packed slabs, then an n_devices
+    # field with the data-parallel lane sweep; older baselines without
+    # them were implicitly RAM-backed int32 on one device.
     z_store = rec.get("z_store")
     z_dtype = rec.get("z_dtype")
+    n_devices = rec.get("n_devices")
     if rec.get("mode") == "streaming":
         z_store = z_store or "ram"
         z_dtype = z_dtype or "int32"
+        n_devices = n_devices or 1
     return (rec.get("mode"), rec.get("z_impl") or rec.get("impl"),
             z_store, z_dtype, rec.get("block_docs"), rec.get("workers"),
-            rec.get("slots"))
+            rec.get("slots"), n_devices)
 
 
 def _metric(rec):
@@ -53,10 +61,10 @@ def _metric(rec):
 
 
 def _lane(key):
-    """Coarse (mode, z_store, z_dtype) lane of a record key: CI measures
-    each lane in its own process + check_bench call, so coverage warnings
-    must not fire across lanes."""
-    return key[0], key[2], key[3]
+    """Coarse (mode, z_store, z_dtype, n_devices) lane of a record key:
+    CI measures each lane in its own process + check_bench call, so
+    coverage warnings must not fire across lanes."""
+    return key[0], key[2], key[3], key[7]
 
 
 def compare(fresh, baseline, threshold, obs_overhead_threshold=3.0):

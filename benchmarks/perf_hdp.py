@@ -81,14 +81,29 @@ def stream_bench(args):
 
     rng = np.random.default_rng(0)
     corpus = paper_corpus("ap", rng, scale=args.scale, max_len=128)
-    mesh = make_host_mesh()
     n_dev = len(jax.devices())
+    devices = args.devices
+    if devices is None:
+        import os
+        devices = int(os.environ.get("REPRO_STREAM_DEVICES", "1") or "1")
+    # lane mode keeps the primary mesh on ONE device (the lane threads
+    # place the sweeps across devices themselves) so the measured chain
+    # is bitwise-identical to the single-device records; a multi-device
+    # primary mesh would sample a mesh-shaped chain instead.
+    if devices > 1:
+        from repro import compat
+        mesh = compat.single_device_mesh()
+        mesh_data = 1
+    else:
+        mesh = make_host_mesh()
+        mesh_data = n_dev // mesh.shape["model"]
     v_pad = ((corpus.V + mesh.shape["model"] - 1)
              // mesh.shape["model"]) * mesh.shape["model"]
     results = []
     for block_docs in args.block_docs:
         store = ShardedCorpusStore.from_corpus(
-            corpus, block_docs, doc_multiple=n_dev
+            corpus, block_docs,
+            doc_multiple=int(np.lcm(mesh_data, devices))
         )
         # bucket must hold a document's active topics (min(K, L) —
         # enforced at sampler construction since the delta-stats PR).
@@ -103,18 +118,21 @@ def stream_bench(args):
                           alias_in_kernel=args.alias_in_kernel)
         stream = StreamingHDP(ShardedHDP(mesh, cfg), store,
                               z_store=args.z_store, z_pack=args.z_pack,
-                              block_sparse_tables=args.block_sparse_tables)
+                              block_sparse_tables=args.block_sparse_tables,
+                              n_devices=devices)
         state = stream.init_state(jax.random.key(0))
         state = stream.iteration(state)  # compile + warm cache
         _reset_peak_rss()  # per-config peak, not inherited highs
         bytes0 = state.z_blocks.bytes_written
         rd0 = state.z_blocks.bytes_read
+        dr0 = stream.delta_reduce_bytes
         t0 = time.perf_counter()
         for _ in range(args.iters):
             state = stream.iteration(state)
         dt = time.perf_counter() - t0
         wb_bytes = state.z_blocks.bytes_written - bytes0
         rd_bytes = state.z_blocks.bytes_read - rd0
+        dr_bytes = stream.delta_reduce_bytes - dr0
         obs_on_rate = None
         if args.obs_overhead and not obs.metrics_on():
             # Same run, same chain: attach a throwaway metrics sink and
@@ -140,6 +158,8 @@ def stream_bench(args):
             "mode": "streaming", "z_impl": args.z_impl,
             "z_store": state.z_blocks.kind,
             "z_dtype": state.z_blocks.dtype.name,
+            "n_devices": stream.n_devices,
+            "mesh": "x".join(str(s) for s in mesh.devices.shape),
             "block_docs": store.block_docs, "blocks": store.num_blocks,
             "tokens": store.num_tokens, "iters": args.iters,
             "ppu_budget": budget or 0,
@@ -154,6 +174,12 @@ def stream_bench(args):
                 wb_bytes / args.iters / 2 ** 20, 3),
             "zstore_read_mb_per_iter": round(
                 rd_bytes / args.iters / 2 ** 20, 3),
+            # packed delta_n exchange volume of the lane merge (0.0 on a
+            # single device — no exchange exists); deterministic at a
+            # fixed seed, so check_bench hard-gates it like the other
+            # byte keys.
+            "delta_reduce_mb_per_iter": round(
+                dr_bytes / args.iters / 2 ** 20, 3),
             "peak_rss_mb": _peak_rss_mb(),
             "resident_z_slabs_hwm": int(state.z_blocks.high_water),
         }
@@ -171,7 +197,8 @@ def stream_bench(args):
             rec["tables_pct"] = round(sum(
                 v for k, v in frac.items() if k.startswith("tables")), 3)
         print(f"block_docs={store.block_docs} [{rec['z_store']}/"
-              f"{rec['z_dtype']}]: {rec['tokens_per_s']:,} tok/s "
+              f"{rec['z_dtype']}/d{rec['n_devices']}]: "
+              f"{rec['tokens_per_s']:,} tok/s "
               f"({rec['sec_per_block']}s/block, "
               f"wb {rec['writeback_mb_per_iter']} MB/iter, "
               f"peak RSS {rec['peak_rss_mb']} MB)", flush=True)
@@ -341,6 +368,12 @@ def main():
                          "in the corpus (auto: when coverage < 50%%)")
     ap.add_argument("--block-docs", type=int, nargs="+",
                     default=[64, 256, 1024])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="data-parallel sweep lanes for --stream "
+                         "(default: $REPRO_STREAM_DEVICES or 1); >1 "
+                         "splits each block's rows across that many jax "
+                         "devices with the sparse packed delta_n merge "
+                         "(CPU CI: REPRO_HOST_DEVICES=N ./run.sh ...)")
     # serving-mode knobs (CPU-sized defaults so CI can run them)
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--burnin", type=int, default=8)

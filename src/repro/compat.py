@@ -60,6 +60,27 @@ def mesh_from_devices(
     return Mesh(device_array, axis_names)
 
 
+def single_device_mesh(device=None,
+                       axis_names: Sequence[str] = ("data", "model"),
+                       *, axis_types: Optional[Sequence[Any]] = None,
+                       ) -> Mesh:
+    """A (1, ..., 1) mesh pinned to one device (default: devices()[0]).
+
+    The multi-device streaming conformance suite anchors the primary
+    model mesh here so tables, state and the key schedule are built on
+    the same single device at every lane count — the lane sweeps
+    (core/streaming.py) place work per-device themselves and never
+    widen this mesh.
+    """
+    import numpy as np
+
+    if device is None:
+        device = jax.devices()[0]
+    arr = np.asarray([device]).reshape((1,) * len(axis_names))
+    return mesh_from_devices(arr, tuple(axis_names),
+                             axis_types=axis_types)
+
+
 def default_axis_types(n: int) -> tuple:
     return (AxisType.Auto,) * n
 

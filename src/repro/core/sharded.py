@@ -269,11 +269,18 @@ class ShardedHDP:
         per-device fold happens here so a single-block stream consumes
         randomness bitwise-identically to the monolithic iteration.
         """
-        cfg = self.cfg
         dev_idx = jax.lax.axis_index(tuple(self.mesh.axis_names))
         u = jax.random.uniform(
             jax.random.fold_in(k_u, dev_idx), tokens.shape + (3,), jnp.float32
         )
+        return self._z_sweep_u(ztables, z, tokens, mask, psi, u)
+
+    def _z_sweep_u(self, ztables, z, tokens, mask, psi, u):
+        """Impl dispatch of the z-step on precomputed per-token uniforms
+        ``u`` (tokens.shape + (3,)). No collectives and no PRNG — safe
+        under plain jit outside any shard_map (the lane path below
+        consumes row slices of a block-global uniform array here)."""
+        cfg = self.cfg
         if cfg.z_impl == "pallas":
             from repro.kernels.hdp_z import ops as zops
 
@@ -454,6 +461,51 @@ class ShardedHDP:
             out_specs=(s["z"], s["n"], P()),
             check_vma=False,
         )
+
+    def z_lane_fn(self, n_lanes: int, lane: int, block_docs: int):
+        """Single-device lane variant of ``z_block_fn`` for the
+        data-parallel streaming driver (core/streaming.py lane mode):
+        ``(ztables, z_rows, tokens_rows, mask_rows, psi, k_ub) ->
+        (z_rows', dn_full, dh)`` over this lane's ``block_docs //
+        n_lanes`` document rows.
+
+        Device-count bitwise invariance: the lane generates the FULL
+        block's uniforms from ``fold_in(k_ub, 0)`` — exactly the array
+        the single-device sweep draws inside its (1, 1)-mesh shard_map —
+        and consumes only its static row slice, so every lane count
+        (including 1) samples identical per-token uniforms. XLA pushes
+        the static slice through the elementwise threefry lowering, so
+        each lane materializes ~its slice, not the whole block.
+
+        No collectives: ``dn_full`` is the lane's whole (K, V) integer
+        delta and ``dh`` its unreduced histogram — the driver merges
+        them host-side through the packed exchange (data/deltawire.py),
+        which is the single-host prototype of the cross-host wire
+        protocol. Runs under plain jit; placement follows the committed
+        input arrays (the driver stages each lane's rows onto its
+        device)."""
+        if block_docs % n_lanes:
+            raise ValueError(
+                f"block_docs={block_docs} not divisible by "
+                f"n_lanes={n_lanes}")
+        cfg = self.cfg
+        rows = block_docs // n_lanes
+        lo = lane * rows
+
+        def fn(ztables, z, tokens, mask, psi, k_ub):
+            u_full = jax.random.uniform(
+                jax.random.fold_in(k_ub, 0),
+                (block_docs, tokens.shape[1], 3), jnp.float32,
+            )
+            u = jax.lax.slice_in_dim(u_full, lo, lo + rows, axis=0)
+            z_new, m, dn = self._z_sweep_u(ztables, z, tokens, mask,
+                                           psi, u)
+            if dn is None:
+                dn = H.delta_n(z, z_new, tokens, mask, cfg.K, cfg.V)
+            dh = H.d_histogram(m, cfg.hist_cap)
+            return z_new, dn, dh
+
+        return fn
 
     # -- state construction -------------------------------------------------
     def init_state(self, key, tokens, mask) -> H.HDPState:

@@ -75,6 +75,9 @@ from __future__ import annotations
 
 import functools
 import os
+import queue
+import threading
+import time
 from typing import NamedTuple, Optional, Union
 
 import jax
@@ -87,11 +90,98 @@ from repro.core import hdp as H
 from repro.core.polya_urn import ppu_sample, ppu_sample_budgeted
 from repro.core.sharded import ShardedHDP
 from repro.core.stick import gem_prior_sample, sample_l, sample_psi
-from repro.data.stream import (BlockPrefetcher, BlockWriteback,
+from repro.data import deltawire
+from repro.data.stream import (AsyncStage, BlockPrefetcher, BlockWriteback,
                                ShardedCorpusStore)
 from repro.data.zstore import (ZBlockStore, ZSlabStore,  # noqa: F401
                                make_zslab_store, pack_dtype_for)
 from repro.train import checkpoint as CKPT
+
+
+class _SweepLane:
+    """One device's z-sweep worker for the data-parallel streaming
+    driver (lane mode, ``StreamingHDP(n_devices > 1)``).
+
+    A daemon thread owns the lane: per submitted block it runs the
+    lane's jitted sweep (``ShardedHDP.z_lane_fn`` — this device's row
+    shard with block-global uniforms), the device-side delta
+    sparsification, and the on-device narrow for the packed write-back,
+    then blocks until the device finishes. The thread is what makes the
+    per-device ``sweep.d{d}`` spans land on distinct trace tracks whose
+    wall-clock overlap ``check_obs --require-overlap`` asserts, and the
+    block wait inside the span is what makes the span measure device
+    work, not dispatch.
+
+    The bounded input queue (depth 2) backpressures the driver so at
+    most two blocks' row shards are in flight per device. Errors are
+    captured and re-raised on the consumer side (``take``); after an
+    error, further submissions drain unprocessed, like ``AsyncStage``.
+    """
+
+    _DONE = object()
+
+    def __init__(self, d: int, device, fn, sparsify, narrow=None):
+        self.d = d
+        self.device = device
+        self.wall_s = 0.0   # cumulative device-sweep wall (this lane)
+        self._fn = fn
+        self._sparsify = sparsify
+        self._narrow = narrow
+        self._in: queue.Queue = queue.Queue(maxsize=2)
+        self._out: queue.Queue = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name=f"sweep.d{d}"
+        )
+        self._thread.start()
+
+    def submit(self, b, ztables, z, tokens, mask, psi, k_ub):
+        self._in.put((b, ztables, z, tokens, mask, psi, k_ub))
+
+    def take(self, b: int):
+        """Next completed block's ``(z_out, idx, val, nnz, dh)``;
+        re-raises the lane's error instead if the worker died."""
+        got = self._out.get()
+        if got[0] == "err":
+            raise got[1]
+        _, rb, payload = got
+        if rb != b:
+            raise RuntimeError(
+                f"lane d{self.d} produced block {rb}, expected {b}")
+        return payload
+
+    def _worker(self):
+        tr = obs.tracer()
+        while True:
+            item = self._in.get()
+            if item is self._DONE:
+                return
+            if self._err is not None:
+                continue  # drain post-error submissions
+            b, ztables, z, tokens, mask, psi, k_ub = item
+            try:
+                t0 = time.perf_counter()
+                with tr.span(f"sweep.d{self.d}", cat="pipeline", block=b):
+                    z_new, dn, dh = self._fn(
+                        ztables, z, tokens, mask, psi, k_ub)
+                    idx, val, nnz = self._sparsify(dn)
+                    if self._narrow is not None:
+                        z_new = self._narrow(z_new)
+                    jax.block_until_ready((z_new, idx, val, nnz, dh))
+                self.wall_s += time.perf_counter() - t0
+                self._out.put(("ok", b, (z_new, idx, val, nnz, dh)))
+            except BaseException as e:  # surfaced on take()
+                self._err = e
+                self._out.put(("err", e))
+
+    def close(self):
+        if self._thread.is_alive():
+            self._in.put(self._DONE)
+            self._thread.join(timeout=600)
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    f"sweep lane d{self.d} failed to drain within 600s "
+                    "(wedged device?)")
 
 
 class StreamingState(NamedTuple):
@@ -127,6 +217,23 @@ class StreamingHDP:
     write-back, and the disk backend's version files all move packed
     bytes (up to 4x less traffic), with exact narrow/widen casts on
     device, so the sampled chain is bitwise-identical to ``"off"``.
+
+    ``n_devices`` (default: the ``REPRO_STREAM_DEVICES`` env var, else
+    1) turns on the data-parallel lane mode: each block's document rows
+    split evenly across the first ``n_devices`` jax devices, every lane
+    runs the fused z-sweep on its row shard concurrently (its own
+    ``_SweepLane`` thread + device), and the per-lane integer deltas
+    merge through the sparse bit-packed ``data/deltawire.py`` exchange
+    — ``n_run += reduce(pack(delta_d))``, bitwise-equal to the
+    single-device sweep because every lane derives its uniforms from
+    the same block key (``fold_in(k_ub, 0)``, the value the (1,1)-mesh
+    path folds) and slices its row range out of the block-global draw,
+    and because the canonical ascending-lane merge order adds the same
+    integers. Requires a single-device primary mesh
+    (``compat.single_device_mesh()`` — a data axis > 1 would fold
+    per-shard keys into the non-sweep ops and sample a mesh-shaped
+    chain instead of the canonical one) and
+    ``block_docs % n_devices == 0``.
     """
 
     def __init__(self, sharded: ShardedHDP, store: ShardedCorpusStore, *,
@@ -134,7 +241,8 @@ class StreamingHDP:
                  z_store: Union[str, None] = None,
                  z_dir: Optional[str] = None,
                  z_pack: Union[str, None] = None,
-                 block_sparse_tables: Union[str, None] = None):
+                 block_sparse_tables: Union[str, None] = None,
+                 n_devices: Union[int, None] = None):
         self.sh = sharded
         self.cfg = sharded.cfg
         self.store = store
@@ -230,6 +338,66 @@ class StreamingHDP:
         self._widen_fn = jax.jit(lambda z: z.astype(jnp.int32))
         _zdt = self.z_dtype
         self._narrow_fn = jax.jit(lambda z: z.astype(_zdt))
+        # data-parallel lane mode: row-shard every block over the first
+        # n_devices jax devices; the per-lane sweeps are plain per-device
+        # jits (no shard_map, no collectives — placement follows the
+        # committed inputs), and the delta merge is the host-mediated
+        # packed exchange (the cross-host wire-protocol prototype).
+        if n_devices is None:
+            n_devices = int(
+                os.environ.get("REPRO_STREAM_DEVICES", "1") or "1")
+        n_devices = int(n_devices)
+        avail = jax.devices()
+        if not 1 <= n_devices <= len(avail):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(avail)}] "
+                "available jax devices (CPU CI: set REPRO_HOST_DEVICES=N "
+                "so run.sh forces N host-platform devices)"
+            )
+        self.n_devices = n_devices
+        self.delta_reduce_bytes = 0  # cumulative packed-exchange volume
+        self._lane_devices = list(avail[:n_devices])
+        if n_devices > 1:
+            model_size = dict(sharded.mesh.shape)[sharded.model_axis]
+            if model_size != 1:
+                raise ValueError(
+                    "lane mode needs a model axis of size 1 on the "
+                    f"primary mesh (got {model_size}): vocab-sharded "
+                    "tables would build differently per device count, "
+                    "breaking the bitwise device-count invariance — use "
+                    "compat.single_device_mesh()"
+                )
+            mesh_size = int(sharded.mesh.devices.size)
+            if mesh_size != 1:
+                raise ValueError(
+                    "lane mode needs a single-device primary mesh (got "
+                    f"{mesh_size} devices): a data axis > 1 runs the "
+                    "non-sweep ops under shard_map with per-shard key "
+                    "folds, sampling a mesh-shaped chain instead of the "
+                    "canonical single-device one — use "
+                    "compat.single_device_mesh(); the lanes place their "
+                    "own work across devices"
+                )
+            if store.block_docs % n_devices:
+                raise ValueError(
+                    f"block_docs={store.block_docs} must divide evenly "
+                    f"over n_devices={n_devices} lanes"
+                )
+            self._lane_rows = store.block_docs // n_devices
+            # static nnz cap for the device-side COO extraction: the
+            # z-step moves each resampled token between at most two
+            # (k, v) cells.
+            from repro.kernels.hdp_z import ops as zops
+
+            cap = int(min(2 * self._lane_rows * store.max_len,
+                          cfg.K * cfg.V))
+            self._sparsify_fn = jax.jit(
+                lambda dn: zops.delta_sparsify(dn, cap))
+            self._lane_fns = [
+                jax.jit(sharded.z_lane_fn(n_devices, d, store.block_docs),
+                        donate_argnums=(1,))
+                for d in range(n_devices)
+            ]
         # foreign-dir checkpoint stores (save dirs that are NOT a disk
         # slab store's home); slab stores track their own dirty stamps.
         self._zstores: dict[str, ZBlockStore] = {}
@@ -328,22 +496,43 @@ class StreamingHDP:
             return blk, z
 
         packed = self.z_dtype != np.int32
+        lane_mode = self.n_devices > 1
 
         def stage(item):
             blk, z = item
             with obs.tracer().span("h2d", cat="pipeline", block=blk.index):
-                # packed slabs cross H2D at their packed width and widen
-                # to the sampler's int32 on device (exact for values < K).
-                z_dev = jax.device_put(jnp.asarray(z), self._z_sh)
-                if packed:
-                    z_dev = self._widen_fn(z_dev)
-                out = (
-                    blk.index,
-                    jax.device_put(jnp.asarray(blk.tokens), self._ts),
-                    jax.device_put(jnp.asarray(blk.mask), self._ms),
-                    z_dev,
-                )
-                z_store.release(blk.index)  # device copy exists now
+                if lane_mode:
+                    # per-device H2D lanes: each device receives only its
+                    # row shard (tokens/mask/z), so staging traffic per
+                    # device shrinks by the lane count and the sweeps can
+                    # start without any cross-device gather.
+                    rows = self._lane_rows
+                    toks, msks, zs = [], [], []
+                    for d, dev in enumerate(self._lane_devices):
+                        sl = slice(d * rows, (d + 1) * rows)
+                        z_d = jax.device_put(jnp.asarray(z[sl]), dev)
+                        if packed:
+                            z_d = self._widen_fn(z_d)
+                        toks.append(
+                            jax.device_put(jnp.asarray(blk.tokens[sl]), dev))
+                        msks.append(
+                            jax.device_put(jnp.asarray(blk.mask[sl]), dev))
+                        zs.append(z_d)
+                    out = (blk.index, toks, msks, zs)
+                else:
+                    # packed slabs cross H2D at their packed width and
+                    # widen to the sampler's int32 on device (exact for
+                    # values < K).
+                    z_dev = jax.device_put(jnp.asarray(z), self._z_sh)
+                    if packed:
+                        z_dev = self._widen_fn(z_dev)
+                    out = (
+                        blk.index,
+                        jax.device_put(jnp.asarray(blk.tokens), self._ts),
+                        jax.device_put(jnp.asarray(blk.mask), self._ms),
+                        z_dev,
+                    )
+                z_store.release(blk.index)  # device copies exist now
             return out
 
         def drop(item):
@@ -426,6 +615,15 @@ class StreamingHDP:
         z_store = state.z_blocks
         done = 0
         saved_cursor = -1
+        lane_mode = self.n_devices > 1
+        lanes: list = []
+        reducer = None
+        # lane mode hands statistic ownership to the reducer thread: it
+        # merges each block's per-lane packed deltas in canonical
+        # ascending-lane order and advances n_run/dh_acc; the driver
+        # reads them back out of ``hold`` after a flush/close barrier.
+        hold = {"n_run": n_run, "dh_acc": dh_acc,
+                "dn_nnz": 0 if health else None}
         staged = self._staged_blocks(z_store, start_block)
         writer = BlockWriteback(
             z_store.write, depth=self.writeback_depth,
@@ -435,6 +633,59 @@ class StreamingHDP:
                 with tr.span("tables.build", cat="pipeline"), \
                         clock.time("tables.build"):
                     jax.block_until_ready(ztables)
+            if lane_mode:
+                # every lane holds its own replica of the (small) z-step
+                # tables and psi; each block then moves only row shards.
+                ztab_lanes = [jax.device_put(ztables, dev)
+                              for dev in self._lane_devices]
+                psi_lanes = [jax.device_put(state.psi, dev)
+                             for dev in self._lane_devices]
+                narrow = (None if self.z_dtype == np.int32
+                          else self._narrow_fn)
+                lanes = [
+                    _SweepLane(d, dev, self._lane_fns[d],
+                               self._sparsify_fn, narrow)
+                    for d, dev in enumerate(self._lane_devices)
+                ]
+                K, V = cfg.K, cfg.V
+
+                def reduce_block(b):
+                    # collect the lanes' sweeps (ascending-lane order —
+                    # the canonical merge order the bitwise contract
+                    # fixes), pack each lane's COO delta to the
+                    # narrowest wire dtypes, and advance the statistic
+                    # by ONE device add of the host-merged delta.
+                    parts = [lane.take(b) for lane in lanes]
+                    with tr.span("delta_reduce", cat="pipeline", block=b):
+                        packs, dh_sum, z_parts = [], None, []
+                        for z_new, idx, val, nnz, dh in parts:
+                            nz = int(nnz)
+                            packs.append(deltawire.pack_coo(
+                                np.asarray(idx)[:nz],
+                                np.asarray(val)[:nz], (K, V)))
+                            dh_h = np.asarray(dh)
+                            dh_sum = (dh_h if dh_sum is None
+                                      else dh_sum + dh_h)
+                            z_parts.append(z_new)
+                        merged = deltawire.reduce_packed(
+                            packs, shape=(K, V))
+                        self.delta_reduce_bytes += \
+                            deltawire.packed_nbytes(packs)
+                        dn_dev = jax.device_put(
+                            jnp.asarray(merged), self._n_sh)
+                        dh_dev = jax.device_put(
+                            jnp.asarray(dh_sum.astype(np.int32)),
+                            self._repl_sh)
+                        hold["n_run"], hold["dh_acc"] = self._merge_fn(
+                            hold["n_run"], dn_dev, hold["dh_acc"], dh_dev)
+                        if health:
+                            # == the single-device per-block nnz: the
+                            # merged host delta IS dn_c's integer values.
+                            hold["dn_nnz"] += int(np.count_nonzero(merged))
+                    writer.submit(b, z_parts)
+
+                reducer = AsyncStage(reduce_block, depth=2,
+                                     name="delta_reduce")
             staged_it = iter(staged)
             while True:
                 # the wait for the next staged block is the driver-side
@@ -450,20 +701,35 @@ class StreamingHDP:
                 # is bitwise the monolithic sampler; later blocks fold
                 # their index.
                 k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
-                with tr.span("sweep", cat="pipeline", block=b), \
-                        clock.time("sweep"):
-                    z_b, dn_c, dh_c = self._z_fn(
-                        ztables, z_b, tokens_b, mask_b, state.psi, k_ub
-                    )
-                    n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
-                    if health:
-                        dn_nnz = self._nnz_fn(dn_nnz, dn_c)
-                # narrow on device so the write-back D2H moves packed
-                # bytes (the slab store lands them as-is).
-                with tr.span("wb_submit", cat="pipeline", block=b), \
-                        clock.time("wb_submit"):
-                    writer.submit(b, z_b if self.z_dtype == np.int32
-                                  else self._narrow_fn(z_b))
+                if lane_mode:
+                    # dispatch only: each lane thread runs its row
+                    # shard's sweep on its own device; the reducer
+                    # thread merges and hands the swept shards to the
+                    # write-back. The driver never waits on a device.
+                    with tr.span("sweep_submit", cat="pipeline", block=b), \
+                            clock.time("sweep_submit"):
+                        for d, lane in enumerate(lanes):
+                            lane.submit(
+                                b, ztab_lanes[d], z_b[d], tokens_b[d],
+                                mask_b[d], psi_lanes[d],
+                                jax.device_put(k_ub, lane.device))
+                        reducer.submit(b)
+                else:
+                    with tr.span("sweep", cat="pipeline", block=b), \
+                            clock.time("sweep"):
+                        z_b, dn_c, dh_c = self._z_fn(
+                            ztables, z_b, tokens_b, mask_b, state.psi, k_ub
+                        )
+                        n_run, dh_acc = self._merge_fn(
+                            n_run, dn_c, dh_acc, dh_c)
+                        if health:
+                            dn_nnz = self._nnz_fn(dn_nnz, dn_c)
+                    # narrow on device so the write-back D2H moves packed
+                    # bytes (the slab store lands them as-is).
+                    with tr.span("wb_submit", cat="pipeline", block=b), \
+                            clock.time("wb_submit"):
+                        writer.submit(b, z_b if self.z_dtype == np.int32
+                                      else self._narrow_fn(z_b))
                 done += 1
                 cursor = b + 1
                 if (ckpt_dir and ckpt_every_blocks
@@ -471,6 +737,9 @@ class StreamingHDP:
                         and cursor % ckpt_every_blocks == 0):
                     with tr.span("checkpoint", cat="pipeline", block=b), \
                             clock.time("checkpoint"):
+                        if lane_mode:
+                            reducer.flush()  # statistic current in hold
+                            n_run, dh_acc = hold["n_run"], hold["dh_acc"]
                         writer.flush()  # checkpoint reads the stored slabs
                         self._save_partial(
                             ckpt_dir, state, cursor, n_run, dh_acc)
@@ -478,24 +747,42 @@ class StreamingHDP:
                 if stop_after_blocks is not None and done >= stop_after_blocks:
                     if cursor < self.store.num_blocks:
                         if saved_cursor != cursor:
+                            if lane_mode:
+                                reducer.flush()
+                                n_run, dh_acc = hold["n_run"], hold["dh_acc"]
                             writer.flush()
                             self._save_partial(
                                 ckpt_dir, state, cursor, n_run, dh_acc)
                         return None
         finally:
             staged.close()  # unblock the prefetch workers on early exit
-            writer.close()  # drain outstanding write-backs
+            try:
+                if lane_mode:
+                    try:
+                        if reducer is not None:
+                            reducer.close()  # drain merges (reads lanes)
+                    finally:
+                        for lane in lanes:
+                            lane.close()
+            finally:
+                writer.close()  # drain outstanding write-backs
+        if lane_mode:
+            n_run, dh_acc, dn_nnz = (hold["n_run"], hold["dh_acc"],
+                                     hold["dn_nnz"])
         with tr.span("tail", cat="pipeline"), clock.time("tail"):
             l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
         out = StreamingState(
             n=n_run, phi=phi_shard, varphi=varphi_shard, psi=psi, l=l,
             key=key, it=state.it + 1, z_blocks=z_store,
         )
-        self._publish_health(out, dn_nnz, done, dh_acc=dh_acc, clock=clock)
+        lane_walls = ([(lane.d, lane.wall_s) for lane in lanes]
+                      if lane_mode and health else None)
+        self._publish_health(out, dn_nnz, done, dh_acc=dh_acc, clock=clock,
+                             lane_walls=lane_walls)
         return out
 
     def _publish_health(self, state: StreamingState, dn_nnz, blocks_done,
-                        dh_acc=None, clock=None):
+                        dh_acc=None, clock=None, lane_walls=None):
         """Per-iteration model-health metrics into the global registry.
 
         Cheap host-side counters/gauges are always maintained; the
@@ -519,6 +806,17 @@ class StreamingHDP:
         M.gauge("train.zstore_written_mb").set(
             round(store.bytes_written / 2 ** 20, 3))
         M.gauge("train.resident_z_slabs_hwm").set(int(store.high_water))
+        M.gauge("train.n_devices").set(self.n_devices)
+        if self.n_devices > 1:
+            M.gauge("train.delta_reduce_mb").set(
+                round(self.delta_reduce_bytes / 2 ** 20, 3))
+        if lane_walls:
+            # per-device sweep wall, as phase counters with a proc label
+            # (the dashboard renders them as sweep/d0, sweep/d1, ...
+            # device lanes in the phase bar).
+            for d, sec in lane_walls:
+                M.counter("train.phase_ms", phase="sweep",
+                          proc=f"d{d}").inc(round(sec * 1e3, 3))
         if dn_nnz is not None:
             M.gauge("train.k_star").set(int(self._kstar_fn(state.n)))
             denom = max(blocks_done, 1) * self.cfg.K * self.cfg.V
@@ -577,8 +875,17 @@ class StreamingHDP:
                 state.n, state.psi, k_phi
             )
             jax.block_until_ready((phi_shard, varphi_shard))
+        lane_mode = self.n_devices > 1
         with timers.phase("tables.gather"):
             jax.block_until_ready(ztables)
+            if lane_mode:
+                # lane replica distribution is part of making the tables
+                # usable, so it bills to the gather phase.
+                ztab_lanes = [jax.device_put(ztables, dev)
+                              for dev in self._lane_devices]
+                psi_lanes = [jax.device_put(state.psi, dev)
+                             for dev in self._lane_devices]
+                jax.block_until_ready((ztab_lanes, psi_lanes))
         n_run = state.n
         dh_acc = jax.device_put(
             jnp.zeros((cfg.K, cfg.hist_cap + 1), jnp.int32), self._repl_sh)
@@ -594,26 +901,79 @@ class StreamingHDP:
             with timers.phase("z_read"):
                 z_host = z_store.read(b)
             with timers.phase("h2d"):
-                tokens_b = jax.device_put(jnp.asarray(blk.tokens), self._ts)
-                mask_b = jax.device_put(jnp.asarray(blk.mask), self._ms)
-                z_b = jax.device_put(jnp.asarray(z_host), self._z_sh)
-                if packed:
-                    z_b = self._widen_fn(z_b)
-                jax.block_until_ready((tokens_b, mask_b, z_b))
+                if lane_mode:
+                    rows = self._lane_rows
+                    toks, msks, zs = [], [], []
+                    for d, dev in enumerate(self._lane_devices):
+                        sl = slice(d * rows, (d + 1) * rows)
+                        z_d = jax.device_put(jnp.asarray(z_host[sl]), dev)
+                        if packed:
+                            z_d = self._widen_fn(z_d)
+                        toks.append(jax.device_put(
+                            jnp.asarray(blk.tokens[sl]), dev))
+                        msks.append(jax.device_put(
+                            jnp.asarray(blk.mask[sl]), dev))
+                        zs.append(z_d)
+                    jax.block_until_ready((toks, msks, zs))
+                else:
+                    tokens_b = jax.device_put(
+                        jnp.asarray(blk.tokens), self._ts)
+                    mask_b = jax.device_put(jnp.asarray(blk.mask), self._ms)
+                    z_b = jax.device_put(jnp.asarray(z_host), self._z_sh)
+                    if packed:
+                        z_b = self._widen_fn(z_b)
+                    jax.block_until_ready((tokens_b, mask_b, z_b))
                 z_store.release(b)
             k_ub = k_u if b == 0 else jax.random.fold_in(k_u, b)
-            with timers.phase("sweep"):
-                z_b, dn_c, dh_c = self._z_fn(
-                    ztables, z_b, tokens_b, mask_b, state.psi, k_ub
-                )
-                jax.block_until_ready(z_b)
-            with timers.phase("merge"):
-                n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
-                jax.block_until_ready(n_run)
-            with timers.phase("writeback"):
-                z_store.write(
-                    b, np.asarray(z_b if not packed
-                                  else self._narrow_fn(z_b)))
+            if lane_mode:
+                with timers.phase("sweep"):
+                    outs = [
+                        self._lane_fns[d](
+                            ztab_lanes[d], zs[d], toks[d], msks[d],
+                            psi_lanes[d],
+                            jax.device_put(k_ub, self._lane_devices[d]))
+                        for d in range(self.n_devices)
+                    ]
+                    jax.block_until_ready([o[0] for o in outs])
+                with timers.phase("merge"):
+                    # the same packed exchange iteration()'s reducer
+                    # thread runs: ascending-lane COO pack, host merge,
+                    # one device add.
+                    packs, dh_sum = [], None
+                    for _, dn, dh in outs:
+                        idx, val, nnz = self._sparsify_fn(dn)
+                        nz = int(nnz)
+                        packs.append(deltawire.pack_coo(
+                            np.asarray(idx)[:nz], np.asarray(val)[:nz],
+                            (cfg.K, cfg.V)))
+                        dh_h = np.asarray(dh)
+                        dh_sum = dh_h if dh_sum is None else dh_sum + dh_h
+                    merged = deltawire.reduce_packed(
+                        packs, shape=(cfg.K, cfg.V))
+                    self.delta_reduce_bytes += deltawire.packed_nbytes(packs)
+                    dn_dev = jax.device_put(jnp.asarray(merged), self._n_sh)
+                    dh_dev = jax.device_put(
+                        jnp.asarray(dh_sum.astype(np.int32)), self._repl_sh)
+                    n_run, dh_acc = self._merge_fn(
+                        n_run, dn_dev, dh_acc, dh_dev)
+                    jax.block_until_ready(n_run)
+                with timers.phase("writeback"):
+                    z_store.write(b, np.concatenate(
+                        [np.asarray(z if not packed else self._narrow_fn(z))
+                         for z, _, _ in outs], axis=0))
+            else:
+                with timers.phase("sweep"):
+                    z_b, dn_c, dh_c = self._z_fn(
+                        ztables, z_b, tokens_b, mask_b, state.psi, k_ub
+                    )
+                    jax.block_until_ready(z_b)
+                with timers.phase("merge"):
+                    n_run, dh_acc = self._merge_fn(n_run, dn_c, dh_acc, dh_c)
+                    jax.block_until_ready(n_run)
+                with timers.phase("writeback"):
+                    z_store.write(
+                        b, np.asarray(z_b if not packed
+                                      else self._narrow_fn(z_b)))
         with timers.phase("tail"):
             l, psi = self._tail_fn(dh_acc, state.psi, k_l, k_psi)
             jax.block_until_ready(psi)

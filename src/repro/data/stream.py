@@ -166,13 +166,19 @@ class AsyncStage:
     drains and stops the worker (idempotent). Worker errors are captured
     and re-raised on the next flush/close — after an error, queued and
     subsequent items are dropped unprocessed rather than run against
-    possibly-corrupt state.
+    possibly-corrupt state. ``drop`` (optional) is called for every
+    item discarded that way — the failing item itself and everything
+    after it — so side effects attached to submitted items (a slab
+    checkout, a shared-semaphore permit) are released even when the
+    worker dies mid-iteration instead of exiting cleanly.
     """
 
     _DONE = object()
 
-    def __init__(self, fn, *, depth: int = 2, name: str = "AsyncStage"):
+    def __init__(self, fn, *, depth: int = 2, name: str = "AsyncStage",
+                 drop=None):
         self._fn = fn
+        self._drop = drop
         self._name = name
         self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
         self._err: Optional[BaseException] = None
@@ -186,6 +192,13 @@ class AsyncStage:
         name/args); the no-op singleton when tracing is disabled."""
         return obs.tracer().span(self._name, cat="pipeline")
 
+    def _drop_item(self, item):
+        if self._drop is not None:
+            try:
+                self._drop(item)
+            except BaseException:
+                pass  # undo hooks never mask the original error
+
     def _worker(self):
         while True:
             item = self._q.get()
@@ -193,10 +206,14 @@ class AsyncStage:
                 if item is self._DONE:
                     return
                 if self._err is None:
-                    with self._span(item):
-                        self._fn(item)
-            except BaseException as e:  # surfaced on flush/close
-                self._err = e
+                    try:
+                        with self._span(item):
+                            self._fn(item)
+                    except BaseException as e:  # surfaced on flush/close
+                        self._err = e
+                        self._drop_item(item)
+                else:
+                    self._drop_item(item)
             finally:
                 self._q.task_done()
 
@@ -238,6 +255,12 @@ class BlockWriteback(AsyncStage):
     The bounded queue (``depth``) backpressures the driver so at most
     ``depth`` swept blocks are pinned on device awaiting write-back.
 
+    The multi-device streaming driver submits a *list* of per-lane row
+    shards instead of one array: the worker materializes each lane's
+    shard (waiting on that device) and reassembles the full slab by row
+    concatenation before the single sink write — D2H runs one lane at a
+    time but the device sweeps it waits on already ran in parallel.
+
     ``flush()`` waits until everything submitted so far has been written
     (call before reading the sink's target, e.g. a checkpoint save);
     ``close()`` drains and stops the worker. Worker errors are re-raised
@@ -245,10 +268,15 @@ class BlockWriteback(AsyncStage):
     """
 
     def __init__(self, sink, *, depth: int = 2):
-        super().__init__(
-            lambda item: sink(item[0], np.asarray(item[1])),
-            depth=depth, name="BlockWriteback",
-        )
+        def run(item):
+            index, dev = item
+            if isinstance(dev, (list, tuple)):
+                arr = np.concatenate([np.asarray(x) for x in dev], axis=0)
+            else:
+                arr = np.asarray(dev)
+            sink(index, arr)
+
+        super().__init__(run, depth=depth, name="BlockWriteback")
 
     def _span(self, item):
         # the materialize inside this span waits on the device sweep,
@@ -346,7 +374,18 @@ class BlockPrefetcher:
                 for item in items:
                     if self._stop.is_set() or not acquire():
                         break
-                    mid.put(pre(item))
+                    try:
+                        staged = pre(item)
+                    except BaseException:
+                        # the permit acquired for this item never reaches
+                        # the consumer (who would release it) — give it
+                        # back so the shared in-flight budget stays exact
+                        # across the error. ``pre`` undoes its own partial
+                        # side effects (e.g. DiskZStore.read checks the
+                        # slab back in on a failed load).
+                        self._sem.release()
+                        raise
+                    mid.put(staged)
             except BaseException as e:  # surfaced on the consumer side
                 self._err = e
             finally:

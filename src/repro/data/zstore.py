@@ -461,11 +461,18 @@ class DiskZStore(ZSlabStore):
 
     def read(self, b: int) -> np.ndarray:
         self._checkout(b)
-        # packed stores keep packed files AND hand out packed slabs: the
-        # disk read and the H2D copy both move dtype-sized bytes.
-        with obs.tracer().span("zstore_read", cat="zstore", block=b):
-            arr = self._zbs.load_block(b, int(self._zbs.versions[b]),
-                                       self.block_shape, self.dtype)
+        try:
+            # packed stores keep packed files AND hand out packed slabs:
+            # the disk read and the H2D copy both move dtype-sized bytes.
+            with obs.tracer().span("zstore_read", cat="zstore", block=b):
+                arr = self._zbs.load_block(b, int(self._zbs.versions[b]),
+                                           self.block_shape, self.dtype)
+        except BaseException:
+            # a failed load checked nothing out for the caller to
+            # release — undo, or the resident-slab accounting (and the
+            # prefetcher's high-water bound) leaks across the error.
+            self._checkin(b)
+            raise
         self.bytes_read += arr.nbytes
         return arr
 

@@ -217,6 +217,24 @@ def max_column_nnz(phi: jax.Array) -> jax.Array:
     return jnp.max(jnp.sum((phi > 0).astype(jnp.int32), axis=0))
 
 
+def delta_sparsify(dn: jax.Array, cap: int):
+    """Device-side COO extraction of a sweep's integer ``delta_n``: the
+    device half of the sparse bit-packed exchange (data/deltawire.py).
+
+    Returns ``(idx, val, nnz)`` with ``idx`` the first ``cap`` flat
+    C-order nonzero positions (ascending, zero-padded past ``nnz``),
+    ``val`` the deltas at those positions, ``nnz`` the true count.
+    ``cap`` must be a static upper bound on nnz — the z-step changes at
+    most two cells per resampled token, so ``min(2 * tokens, K * V)``
+    always holds — which keeps the D2H copy bounded by ``cap`` entries
+    instead of the full (K, V) grid; the host then truncates to ``nnz``
+    and dtype-narrows (``deltawire.pack_coo``)."""
+    flat = dn.reshape(-1)
+    nnz = jnp.count_nonzero(flat)
+    (idx,) = jnp.nonzero(flat, size=cap, fill_value=0)
+    return idx.astype(jnp.int32), flat[idx], nnz
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

@@ -132,12 +132,20 @@ def render(snaps: list[dict], out=sys.stdout):
             print(f"  ESS ll {_fmt(ess_ll)}  K* {_fmt(_gauge(mm, 'train.ess_k_star'))}"
                   f"   Geweke ll {_fmt(_gauge(mm, 'train.geweke_log_lik'))}"
                   f"  K* {_fmt(_gauge(mm, 'train.geweke_k_star'))}", file=out)
+        ndev = _gauge(mm, "train.n_devices")
+        drmb = _gauge(mm, "train.delta_reduce_mb")
+        if ndev is not None and ndev > 1:
+            print(f"  devices {_fmt(ndev)}   delta-reduce wire "
+                  f"{_fmt(drmb, 3)} MB", file=out)
         phases = _labeled(mm, "train.phase_ms")
         total = sum(m["value"] for _, m in phases)
         if phases and total > 0:
             print("  phase fractions:", file=out)
             for label, m in sorted(phases, key=lambda lm: -lm[1]["value"]):
-                name = label.strip("{}").replace("phase=", "")
+                # per-lane sweep walls carry a proc=dN label:
+                # {phase=sweep,proc=d0} renders as sweep/d0
+                name = (label.strip("{}").replace("phase=", "")
+                        .replace(",proc=", "/"))
                 frac = m["value"] / total
                 print(f"    {name:<12} {bar(frac)} {frac * 100:5.1f}%",
                       file=out)

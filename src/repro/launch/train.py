@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import time
 
 import jax
@@ -90,6 +91,14 @@ def train_lm(args):
     return state, history
 
 
+def _stream_devices(args):
+    """Lane count for the streaming driver: --devices, else
+    $REPRO_STREAM_DEVICES, else 1."""
+    if args.devices is not None:
+        return args.devices
+    return int(os.environ.get("REPRO_STREAM_DEVICES", "1") or "1")
+
+
 def train_hdp_streaming(args, corpus, sh):
     """Minibatch path: corpus swept block-by-block in bounded device
     memory, resumable mid-epoch (block cursor + RNG in the checkpoint).
@@ -99,13 +108,18 @@ def train_hdp_streaming(args, corpus, sh):
     from repro.core.streaming import StreamingHDP
     from repro.data.stream import ShardedCorpusStore
 
-    n_dev = len(jax.devices())
+    data_size = (int(sh.mesh.devices.size)
+                 // dict(sh.mesh.shape)[sh.model_axis])
+    devices = _stream_devices(args)
     store = ShardedCorpusStore.from_corpus(
-        corpus, args.block_docs, doc_multiple=n_dev
+        # blocks must pad to a doc count both the mesh's data axis and
+        # the lane split can divide evenly
+        corpus, args.block_docs,
+        doc_multiple=int(np.lcm(data_size, devices))
     )
     stream = StreamingHDP(sh, store, z_store=args.z_store,
                           z_dir=args.z_dir or args.ckpt,
-                          z_pack=args.z_pack)
+                          z_pack=args.z_pack, n_devices=devices)
     state, resume_kw = (None, {})
     if args.ckpt:
         state, resume_kw = stream.restore(args.ckpt)
@@ -156,8 +170,17 @@ def train_hdp(args):
 
     rng = np.random.default_rng(args.seed)
     corpus = paper_corpus(args.hdp, rng, scale=args.scale, max_len=args.max_len)
-    mesh = MESH.make_host_mesh()
-    n_dev = len(jax.devices())
+    # lane mode (streaming, --devices > 1) keeps the model and key
+    # schedule on ONE device — the lane threads place the sweeps across
+    # devices themselves — so the chain stays bitwise-identical to the
+    # canonical single-device run. A multi-device primary mesh would
+    # fold per-shard keys into the non-sweep ops and sample a
+    # mesh-shaped chain instead (StreamingHDP rejects it).
+    lane_mode = args.stream and _stream_devices(args) > 1
+    from repro import compat
+    mesh = (compat.single_device_mesh() if lane_mode
+            else MESH.make_host_mesh())
+    n_dev = 1 if lane_mode else len(jax.devices())
     corpus = shard_balanced(corpus, n_dev)
     k_topics = args.topics
     v_pad = ((corpus.V + mesh.shape["model"] - 1) // mesh.shape["model"]
@@ -234,6 +257,13 @@ def main():
                          "device memory; required beyond-device-memory runs)")
     ap.add_argument("--block-docs", type=int, default=4096,
                     help="documents per streaming block")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="data-parallel sweep lanes (streaming only): "
+                         "split each block's rows across this many "
+                         "devices; the chain stays bitwise-identical to "
+                         "--devices 1. Default: $REPRO_STREAM_DEVICES "
+                         "or 1. On CPU, expose host devices with "
+                         "REPRO_HOST_DEVICES=N ./run.sh ...")
     ap.add_argument("--z-store", default=None, choices=["ram", "disk"],
                     help="z-slab backend (streaming only): 'ram' keeps "
                          "all slabs host-resident, 'disk' keeps only "

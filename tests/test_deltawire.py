@@ -1,0 +1,145 @@
+"""Sparse bit-packed delta_n wire format (data/deltawire.py).
+
+The lane-mode streaming driver merges per-device integer deltas through
+this format, so its one invariant is exactness: for ANY shard set,
+``reduce_packed(pack(shard_i)) == sum(shard_i)`` bitwise, regardless of
+which dtype tier or the dense fallback each shard landed on. The
+deterministic tests pin the dtype-threshold boundaries and the
+COO/dense crossover; the hypothesis section sweeps nnz fractions and
+value ranges (skipped on slim images without the optional dep).
+"""
+
+import numpy as np
+import pytest
+
+from repro.data import deltawire as DW
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on slim images
+    HAVE_HYPOTHESIS = False
+
+
+# -- dtype tiers --------------------------------------------------------------
+
+def test_idx_dtype_thresholds():
+    assert DW.idx_dtype_for(0) == np.uint8
+    assert DW.idx_dtype_for(255) == np.uint8
+    assert DW.idx_dtype_for(256) == np.uint16
+    assert DW.idx_dtype_for(65535) == np.uint16
+    assert DW.idx_dtype_for(65536) == np.int32
+
+
+def test_val_dtype_thresholds():
+    assert DW.val_dtype_for(-128, 127) == np.int8
+    assert DW.val_dtype_for(-129, 0) == np.int16
+    assert DW.val_dtype_for(0, 128) == np.int16
+    assert DW.val_dtype_for(-32768, 32767) == np.int16
+    assert DW.val_dtype_for(0, 32768) == np.int32
+    assert DW.val_dtype_for(-32769, 0) == np.int32
+
+
+def test_pack_lands_on_narrowest_dtypes():
+    # max flat index 255 / values in int8 range -> 2 bytes per entry
+    p = DW.pack_delta(np.eye(16, 16, dtype=np.int32) * -3)
+    assert p.kind == "coo"
+    assert p.idx.dtype == np.uint8 and p.val.dtype == np.int8
+    # one index past the uint8 boundary widens idx only
+    dn = np.zeros((16, 17), np.int32)
+    dn[15, 16] = 1  # flat index 271
+    p = DW.pack_delta(dn)
+    assert p.idx.dtype == np.uint16 and p.val.dtype == np.int8
+    # value past int8 widens val only
+    dn = np.zeros((4, 4), np.int32)
+    dn[0, 0] = 200
+    p = DW.pack_delta(dn)
+    assert p.idx.dtype == np.uint8 and p.val.dtype == np.int16
+
+
+# -- round trip / reduce ------------------------------------------------------
+
+def test_roundtrip_empty_and_boundary_values():
+    zero = np.zeros((8, 8), np.int32)
+    p = DW.pack_delta(zero)
+    assert p.kind == "coo" and p.nbytes == 0
+    np.testing.assert_array_equal(DW.unpack_delta(p), zero)
+    dn = np.zeros((8, 8), np.int32)
+    dn[0, 0], dn[7, 7] = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+    np.testing.assert_array_equal(DW.unpack_delta(DW.pack_delta(dn)), dn)
+
+
+def test_dense_fallback_crossover():
+    # below the threshold: coo; past it: dense at the narrow val dtype
+    dn = np.zeros((10, 10), np.int32)
+    flat = dn.reshape(-1)
+    flat[:24] = 1  # 24% nnz < 25% threshold
+    p = DW.pack_delta(dn)
+    assert p.kind == "coo"
+    flat[:26] = 1  # 26% > threshold
+    p = DW.pack_delta(dn)
+    assert p.kind == "dense" and p.val.dtype == np.int8
+    assert p.nbytes == 100  # full grid at 1 byte/cell
+    np.testing.assert_array_equal(DW.unpack_delta(p), dn)
+    # byte-count crossover fires even under a permissive threshold:
+    # 50 entries * (1+1)B == 100B dense, so coo stops paying
+    p = DW.pack_delta(dn, dense_threshold=1.0)
+    assert p.kind == "coo"  # 26 * 2 = 52 < 100
+    flat[:50] = 1
+    p = DW.pack_delta(dn, dense_threshold=1.0)
+    assert p.kind == "dense"
+
+
+def test_reduce_matches_dense_sum_and_counts_bytes():
+    rng = np.random.default_rng(0)
+    shards = [rng.integers(-4, 5, (12, 30)).astype(np.int32)
+              * (rng.random((12, 30)) < f)
+              for f in (0.001, 0.05, 0.4)]  # coo, coo, dense mix
+    packs = [DW.pack_delta(s) for s in shards]
+    assert {p.kind for p in packs} == {"coo", "dense"}
+    np.testing.assert_array_equal(
+        DW.reduce_packed(packs), np.sum(shards, axis=0, dtype=np.int32))
+    assert DW.packed_nbytes(packs) == sum(p.nbytes for p in packs)
+    # zero shards with an explicit shape is the empty-block edge
+    np.testing.assert_array_equal(
+        DW.reduce_packed([], shape=(3, 4)), np.zeros((3, 4), np.int32))
+    with pytest.raises(ValueError, match="shape"):
+        DW.reduce_packed([])
+
+
+def test_pack_coo_validates_inputs():
+    with pytest.raises(ValueError, match="mismatch"):
+        DW.pack_coo(np.array([0, 1]), np.array([5]), (4, 4))
+    with pytest.raises(ValueError, match="out of range"):
+        DW.pack_coo(np.array([16]), np.array([1]), (4, 4))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        k=st.integers(1, 20),
+        v=st.integers(1, 40),
+        nnz_frac=st.floats(0.0, 1.0),
+        lo=st.sampled_from([-1, -127, -128, -129, -40000]),
+        hi=st.sampled_from([1, 127, 128, 129, 40000]),
+        nshards=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_packed_reduce_equals_dense_reduce(k, v, nnz_frac, lo, hi,
+                                               nshards, seed):
+        """pack -> reduce -> unpack == plain dense integer sum, across
+        nnz fractions spanning both wire kinds and every dtype tier."""
+        rng = np.random.default_rng(seed)
+        shards = []
+        for _ in range(nshards):
+            dn = rng.integers(lo, hi + 1, (k, v)).astype(np.int32)
+            dn *= rng.random((k, v)) < nnz_frac
+            shards.append(dn)
+        packs = [DW.pack_delta(s) for s in shards]
+        np.testing.assert_array_equal(
+            DW.reduce_packed(packs, shape=(k, v)),
+            np.sum(shards, axis=0, dtype=np.int32))
+        for s, p in zip(shards, packs):
+            np.testing.assert_array_equal(DW.unpack_delta(p), s)
+            # wire never exceeds the dense int32 exchange
+            assert p.nbytes <= s.size * 4

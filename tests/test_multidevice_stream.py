@@ -1,0 +1,201 @@
+"""Multi-device streaming conformance: the data-parallel lane sweep.
+
+The contract (core/streaming.py lane mode): at a fixed seed, the chain
+a ``StreamingHDP(n_devices=N)`` run samples — every model array, the
+chain key, and every z slab — is bitwise-identical to the single-device
+run, for every z impl and slab backend. Runs in subprocesses with
+``--xla_force_host_platform_device_count=4`` so the rest of the suite
+keeps the real single-device backend (same rule as
+tests/test_multidevice.py).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = """
+    import tempfile
+    import numpy as np, jax
+    from repro import compat
+    from repro.core import hdp as H
+    from repro.core.sharded import ShardedHDP
+    from repro.core.streaming import StreamingHDP
+    from repro.data.stream import ShardedCorpusStore
+    from repro.data.synthetic import planted_topics_corpus
+
+    def make_driver(impl, z_store, n_devices, z_dir=None, z_pack=None,
+                    block_docs=8):
+        # alpha/gamma high enough that the tiny chain actually moves
+        # topics within a few iterations — an immobile chain would make
+        # the bitwise comparison vacuously pass.
+        corpus, _ = planted_topics_corpus(
+            np.random.default_rng(0), D=32, V=48, K_true=3,
+            doc_len=(10, 20))
+        cfg = H.HDPConfig(K=12, V=48, bucket=12, z_impl=impl,
+                          hist_cap=32, alpha=2.0, gamma=2.0)
+        sh = ShardedHDP(compat.single_device_mesh(), cfg)
+        store = ShardedCorpusStore.from_corpus(corpus, block_docs)
+        return StreamingHDP(sh, store, z_store=z_store, z_dir=z_dir,
+                            z_pack=z_pack, n_devices=n_devices)
+
+    def chain(drv, iters=3, seed=7):
+        state = drv.init_state(jax.random.key(seed))
+        for _ in range(iters):
+            state = drv.iteration(state)
+        return state
+
+    def fingerprint(state):
+        return dict(
+            n=np.asarray(state.n), phi=np.asarray(state.phi),
+            varphi=np.asarray(state.varphi), psi=np.asarray(state.psi),
+            l=np.asarray(state.l),
+            key=np.asarray(jax.random.key_data(state.key)),
+            z=np.asarray(state.z_blocks.materialize()),
+        )
+
+    def assert_same(ref, got, tag):
+        for k in ref:
+            assert (ref[k] == got[k]).all(), (tag, k)
+"""
+
+
+def run_py(body: str, timeout=500):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(_PRELUDE) + textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert p.returncode == 0, p.stdout + "\n" + p.stderr
+    return p.stdout
+
+
+@pytest.mark.parametrize("impl", ["sparse", "pallas"])
+def test_lane_chain_bitwise_equals_single_device(impl):
+    """n_devices in {2, 4} == n_devices 1, across ram/disk slab stores,
+    with real packed delta traffic on the wire."""
+    out = run_py(f"""
+        impl = {impl!r}
+        with tempfile.TemporaryDirectory() as d:
+            for z_store in ("ram", "disk"):
+                ref = fingerprint(chain(make_driver(
+                    impl, z_store, 1, z_dir=f"{{d}}/r-{{z_store}}")))
+                for nd in (2, 4):
+                    drv = make_driver(impl, z_store, nd,
+                                      z_dir=f"{{d}}/{{nd}}-{{z_store}}")
+                    got = fingerprint(chain(drv))
+                    assert_same(ref, got, (impl, z_store, nd))
+                    # the exchange must actually run sparse-packed
+                    assert drv.delta_reduce_bytes > 0
+                    dense = (3 * drv.store.num_blocks * nd
+                             * drv.cfg.K * drv.cfg.V * 4)
+                    assert drv.delta_reduce_bytes < dense
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_lane_chain_invariant_to_z_pack_and_profiled_twin():
+    """Lane mode composes with z_pack=off (int32 slabs), and
+    ``iteration_profiled`` under n_devices=2 stays the bitwise twin of
+    the overlapped ``iteration``."""
+    out = run_py("""
+        ref = fingerprint(chain(make_driver("sparse", "ram", 1)))
+        got = fingerprint(chain(make_driver(
+            "sparse", "ram", 2, z_pack="off")))
+        assert_same(ref, got, "z_pack=off")
+
+        drv = make_driver("sparse", "ram", 2)
+        state = drv.init_state(jax.random.key(7))
+        for _ in range(3):
+            state, _ = drv.iteration_profiled(state)
+        assert drv.delta_reduce_bytes > 0
+        assert_same(ref, fingerprint(state), "profiled")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_lane_mode_mid_epoch_checkpoint_resume():
+    """A lane-mode sweep killed mid-epoch resumes from the checkpoint to
+    the same chain as an uninterrupted single-device run."""
+    out = run_py("""
+        ref = fingerprint(chain(make_driver("sparse", "disk", 1),
+                                iters=2))
+        with tempfile.TemporaryDirectory() as d:
+            drv = make_driver("sparse", "disk", 2, z_dir=d)
+            state = drv.iteration(drv.init_state(jax.random.key(7)))
+            assert drv.iteration(state, ckpt_dir=d,
+                                 stop_after_blocks=2) is None
+            restored, kw = drv.restore(d)
+            assert kw["start_block"] == 2
+            state = drv.iteration(restored, **kw)
+            assert_same(ref, fingerprint(state), "resume")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_lane_mode_validation():
+    """Misconfigurations fail loudly at construction: model axis > 1,
+    multi-device primary mesh, indivisible block_docs, more lanes than
+    devices."""
+    out = run_py("""
+        import numpy as np
+        from repro.launch.mesh import make_host_mesh
+
+        corpus, _ = planted_topics_corpus(
+            np.random.default_rng(0), D=32, V=48, K_true=3,
+            doc_len=(10, 20))
+        cfg = H.HDPConfig(K=12, V=48, bucket=12, z_impl="sparse",
+                          hist_cap=32)
+        store = ShardedCorpusStore.from_corpus(corpus, 8)
+
+        # make_host_mesh() on 4 devices is (2, 2): model axis 2
+        sh22 = ShardedHDP(make_host_mesh(), cfg)
+        assert dict(sh22.mesh.shape)["model"] == 2
+        try:
+            StreamingHDP(sh22, store, n_devices=2)
+            raise AssertionError("model-axis validation missing")
+        except ValueError as e:
+            assert "model axis" in str(e)
+
+        # model axis 1 but data axis 4: non-sweep ops would fold
+        # per-shard keys and sample a mesh-shaped chain
+        sh41 = ShardedHDP(make_host_mesh((4, 1)), cfg)
+        try:
+            StreamingHDP(sh41, store, n_devices=2)
+            raise AssertionError("mesh-size validation missing")
+        except ValueError as e:
+            assert "single-device primary mesh" in str(e)
+
+        sh = ShardedHDP(compat.single_device_mesh(), cfg)
+        try:
+            StreamingHDP(sh, store, n_devices=3)  # 8 % 3 != 0
+            raise AssertionError("divisibility validation missing")
+        except ValueError as e:
+            assert "block_docs" in str(e)
+        try:
+            StreamingHDP(sh, store, n_devices=8)  # only 4 devices
+            raise AssertionError("device-count validation missing")
+        except ValueError as e:
+            assert "REPRO_HOST_DEVICES" in str(e)
+
+        # env-var default (the launch drivers' knob)
+        import os
+        os.environ["REPRO_STREAM_DEVICES"] = "2"
+        try:
+            drv = StreamingHDP(sh, store)
+            assert drv.n_devices == 2
+        finally:
+            del os.environ["REPRO_STREAM_DEVICES"]
+        print("OK")
+    """)
+    assert "OK" in out

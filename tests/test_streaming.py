@@ -433,6 +433,78 @@ def test_disk_store_releases_checkouts_on_early_exit(rng):
     assert st.z_blocks.resident_slabs == 0, st.z_blocks._resident
 
 
+def test_disk_store_releases_checkouts_on_worker_exception(rng):
+    """A prefetch worker dying mid-iteration (not a clean early exit)
+    must also release every in-flight slab checkout: the killed
+    pipeline's pre-read slabs drop through the undo hooks, accounting
+    returns to zero, and a subsequent iteration still observes the
+    documented resident bound."""
+    corpus, mesh, cfg, sh = make_setup(rng, D=80)
+    store = ShardedCorpusStore.from_corpus(corpus, block_docs=8)
+    stream = StreamingHDP(sh, store, z_store="disk")
+    st = stream.iteration(stream.init_state(jax.random.key(0)))
+    slab = st.z_blocks
+    real_read = slab.read
+    calls = {"n": 0}
+
+    def dying_read(b):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            raise RuntimeError("injected z-read failure")
+        return real_read(b)
+
+    slab.read = dying_read
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            stream.iteration(st)
+    finally:
+        slab.read = real_read
+    assert slab.resident_slabs == 0, slab._resident
+    # recovery: a fresh full sweep completes inside the bound
+    st2 = stream.iteration(st)
+    bound = stream.prefetch_depth + stream.writeback_depth + 1
+    assert 0 < st2.z_blocks.high_water <= bound, (
+        st2.z_blocks.high_water, bound)
+
+
+def test_disk_read_failure_checks_slab_back_in(rng):
+    """DiskZStore.read that fails mid-load (corrupt/missing version
+    file) undoes its own checkout — the caller has nothing to
+    release."""
+    from repro.data.zstore import make_zslab_store
+
+    with tempfile.TemporaryDirectory() as d:
+        slab = make_zslab_store("disk", 2, (4, 6), root=d)
+        slab.write(1, np.ones((4, 6), np.int32))
+        slab._zbs.load_block = lambda *a, **k: (_ for _ in ()).throw(
+            OSError("corrupt version file"))
+        with pytest.raises(OSError, match="corrupt"):
+            slab.read(1)
+        assert slab.resident_slabs == 0, slab._resident
+
+
+def test_async_stage_drop_hook_runs_on_worker_error():
+    """AsyncStage releases item side effects through ``drop`` when the
+    worker dies: the failing item itself AND everything queued or
+    submitted after it."""
+    from repro.data.stream import AsyncStage
+
+    done, dropped = [], []
+
+    def fn(x):
+        if x == 2:
+            raise RuntimeError("worker died")
+        done.append(x)
+
+    stage = AsyncStage(fn, depth=2, drop=dropped.append)
+    for x in range(5):
+        stage.submit(x)
+    with pytest.raises(RuntimeError, match="worker died"):
+        stage.close()
+    assert done == [0, 1]
+    assert dropped == [2, 3, 4]
+
+
 def test_zblockstore_write_block_never_overwrites_foreign_versions(rng):
     """Two store instances on one directory (e.g. two chains
     checkpointing into the same dir): a live write must never reuse —
